@@ -1,0 +1,66 @@
+"""Ablation: macro-instance size and the EcoServe variants.
+
+1. Rolling activation needs peers: a macro instance of size 1 degenerates
+   PaDG to NoDG (paper §4.3.1: "Assuming a macro instance contains only a
+   single instance, the PaDG strategy actually degrades to the NoDG
+   strategy").  We measure attainment at fixed TOTAL capacity (8
+   instances) while varying how many cooperate per macro instance.
+2. Scheduler-variant ladder at a fixed overload rate: paper-faithful
+   EcoServe (mean slack) -> EcoServe++ (min slack) -> EcoServe-CP
+   (chunked fallback), the two beyond-paper increments.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_cost, timed
+from repro.core.padg_system import EcoServeSystem
+from repro.core.slo import DATASET_SLOS
+from repro.simulator.cost_model import GPU_L20
+from repro.simulator.metrics import run_once
+from repro.simulator.workload import WORKLOADS
+
+
+def run(quick: bool = True):
+    cost = make_cost("llama-30b", GPU_L20, tp=4)
+    slo = DATASET_SLOS["sharegpt"]
+    profile = WORKLOADS["sharegpt"]
+    rate = 30.0
+    dur = 45.0 if quick else 120.0
+
+    print("\n== ablation 1: macro-instance cooperation "
+          f"(8 instances total, rate {rate}) ==")
+    out = {}
+    for n_u in (1, 2, 4, 8):
+        # n_upper=n_u carves the 8 instances into 8/n_u macro instances
+        fac = (lambda n_u=n_u: EcoServeSystem(cost, 8, slo, n_lower=1,
+                                              n_upper=n_u))
+        m, us = timed(run_once, fac, profile, rate, slo, duration=dur)
+        out[n_u] = m["attainment"]
+        print(f"  macro size <= {n_u}: attainment = {m['attainment']:.3f}")
+        emit(f"ablation_macro_size_{n_u}", us, f"att={m['attainment']:.3f}")
+    # rolling activation must help: cooperating instances beat isolated
+    assert out[8] >= out[1] - 0.02, out
+
+    print("\n== ablation 2: scheduler variant ladder (rate "
+          f"{rate}, P90 SLO) ==")
+    variants = {
+        "ecoserve (paper, mean slack)":
+            lambda: EcoServeSystem(cost, 8, slo),
+        "ecoserve++ (min slack)":
+            lambda: EcoServeSystem(cost, 8, slo, plus_plus=True),
+        "ecoserve-cp (chunked fallback)":
+            lambda: EcoServeSystem(cost, 8, slo, plus_plus=True,
+                                   chunked_fallback=512),
+    }
+    lad = {}
+    for name, fac in variants.items():
+        m, us = timed(run_once, fac, profile, rate, slo, duration=dur)
+        lad[name] = m["attainment"]
+        print(f"  {name:34} attainment = {m['attainment']:.3f}  "
+              f"ttft_p90={m.get('ttft_p90', 0):.2f}s")
+        emit(f"ablation_variant_{name.split()[0]}", us,
+             f"att={m['attainment']:.3f}")
+    return {"macro": out, "ladder": lad}
+
+
+if __name__ == "__main__":
+    run()

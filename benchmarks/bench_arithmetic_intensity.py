@@ -1,0 +1,74 @@
+"""Paper Table 2: approximate arithmetic intensity of the six primary
+matmul classes, prefill vs decode — computed from the actual model shapes
+and validated against the paper's closed forms (AI_prefill ~ B*S for
+projections, ~S for attention; AI_decode ~ B and ~1)."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.configs import get_config
+
+
+def op_table(cfg, B, S):
+    H = cfg.d_model
+    M = cfg.num_heads
+    rows = []
+    # QKV projection
+    rows.append(("qkv_proj", "prefill", 6 * B * S * H * H,
+                 2 * (6 * B * S * H) / 2 + 3 * H * H * 2))
+    rows.append(("qkv_proj", "decode", 6 * B * H * H,
+                 (6 * B * H + 3 * H * H) * 2))
+    # attention QK^T and PV (per phase)
+    rows.append(("attn_qk", "prefill", 2 * B * S * S * H,
+                 (2 * B * S * H + B * S * S * M) * 2))
+    rows.append(("attn_qk", "decode", 2 * B * S * H,
+                 (2 * B * S * M + B * H * (S + 1)) * 2))
+    rows.append(("attn_pv", "prefill", 2 * B * S * S * H,
+                 (2 * B * S * H + B * S * S * M) * 2))
+    rows.append(("attn_pv", "decode", 2 * B * S * H,
+                 (2 * B * S * M + B * H * (S + 1)) * 2))
+    # output projection
+    rows.append(("out_proj", "prefill", 2 * B * S * H * H,
+                 (2 * B * S * H + H * H) * 2))
+    rows.append(("out_proj", "decode", 2 * B * H * H,
+                 (2 * B * H + H * H) * 2))
+    # FFN expand / reduce (4H intermediate as in the paper's Table 2)
+    rows.append(("ffn_expand", "prefill", 8 * B * S * H * H,
+                 (2 * B * S * H + 4 * H * H) * 2))
+    rows.append(("ffn_expand", "decode", 8 * B * H * H,
+                 (2 * B * H + 4 * H * H) * 2))
+    rows.append(("ffn_reduce", "prefill", 8 * B * S * H * H,
+                 (2 * B * S * H + 4 * H * H) * 2))
+    rows.append(("ffn_reduce", "decode", 8 * B * H * H,
+                 (2 * B * H + 4 * H * H) * 2))
+    return rows
+
+
+def run(quick: bool = True):
+    cfg = get_config("llama-30b")
+    B, S = 8, 512
+    rows, us = timed(op_table, cfg, B, S)
+    print(f"\n== Table 2: arithmetic intensity (Llama-30B, B={B}, S={S}) ==")
+    print(f"{'op':12}{'phase':9}{'FLOPs':>12}{'bytes':>12}{'AI':>9}"
+          f"{'paper-approx':>14}")
+    approx = {"prefill": {"qkv_proj": B * S, "attn_qk": S, "attn_pv": S,
+                          "out_proj": B * S, "ffn_expand": B * S,
+                          "ffn_reduce": B * S},
+              "decode": {"qkv_proj": B, "attn_qk": 1, "attn_pv": 1,
+                         "out_proj": B, "ffn_expand": B, "ffn_reduce": B}}
+    out = {}
+    for name, phase, flops, byts in rows:
+        ai = flops / byts
+        expect = approx[phase][name]
+        print(f"{name:12}{phase:9}{flops:12.3e}{byts:12.3e}{ai:9.1f}"
+              f"{expect:14}")
+        out[f"{name}_{phase}"] = ai
+        # the paper's claim: prefill AI >> decode AI
+    pf = sum(v for k, v in out.items() if "prefill" in k)
+    dc = sum(v for k, v in out.items() if "decode" in k)
+    emit("table2_ai_prefill_over_decode", us, f"{pf / dc:.1f}x")
+    assert pf > 10 * dc
+    return out
+
+
+if __name__ == "__main__":
+    run()

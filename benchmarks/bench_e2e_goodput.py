@@ -1,0 +1,62 @@
+"""Paper Fig. 8: end-to-end goodput under P50/P90/P99 SLO attainment —
+EcoServe vs vLLM / Sarathi / DistServe / MoonCake, per workload x model.
+
+Quick mode runs the headline cell (Llama-30B MHA on the L20 cluster,
+ShareGPT); full mode sweeps models x workloads like the figure.
+"""
+from __future__ import annotations
+
+from benchmarks.common import (QUICK_DURATION, emit, make_cost,
+                               system_factory, timed)
+from repro.core.slo import DATASET_SLOS
+from repro.simulator.cost_model import GPU_L20
+from repro.simulator.metrics import goodput
+from repro.simulator.workload import WORKLOADS
+
+SYSTEMS = ["ecoserve", "ecoserve++", "vllm", "sarathi", "distserve",
+           "mooncake"]
+
+
+def run_cell(model: str, workload: str, tp: int, n_instances: int,
+             percentiles=(0.90,), duration=QUICK_DURATION):
+    cost = make_cost(model, GPU_L20, tp)
+    slo = DATASET_SLOS[workload]
+    profile = WORKLOADS[workload]
+    results = {}
+    for p in percentiles:
+        for name in SYSTEMS:
+            fac = system_factory(name, cost, n_instances, slo)
+            g, us = timed(goodput, fac, profile, slo, p,
+                          duration=duration, hi=96.0)
+            results[(name, p)] = g["goodput"]
+            emit(f"fig8_{model}_{workload}_p{int(p*100)}_{name}", us,
+                 f"goodput={g['goodput']:.2f}req/s")
+    return results
+
+
+def run(quick: bool = True):
+    cells = ([("llama-30b", "sharegpt"), ("llama-30b", "longbench")]
+             if quick else
+             [(m, w) for m in ("llama-30b", "codellama2-34b")
+              for w in ("alpaca", "sharegpt", "longbench")])
+    percentiles = (0.90,) if quick else (0.50, 0.90, 0.99)
+    out = {}
+    for model, workload in cells:
+        print(f"\n== Fig 8 cell: {model} x {workload} (32 L20 GPUs, "
+              f"8 instances TP=4) ==")
+        res = run_cell(model, workload, tp=4, n_instances=8,
+                       percentiles=percentiles)
+        for (name, p), g in sorted(res.items()):
+            print(f"  P{int(p*100)} {name:12} goodput = {g:6.2f} req/s")
+        out[f"{model}_{workload}"] = {f"{n}_p{int(p*100)}": g
+                                      for (n, p), g in res.items()}
+        eco = res[("ecoserve", percentiles[-1])]
+        for rival in ("distserve", "mooncake"):
+            r = res[(rival, percentiles[-1])]
+            if r > 0:
+                print(f"  ecoserve/{rival} = {eco / r:.2f}x")
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,86 @@
+"""Kernel micro-benchmarks: interpret-mode wall time (correctness-path
+only on CPU — TPU timing is projected by the roofline, not measured) plus
+the per-kernel VMEM working-set accounting that justifies the BlockSpec
+choices."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def _time(fn, *args, n=3):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def vmem_working_set(block_q, block_k, G, D, dtype_bytes=2):
+    """flash kernel per-step VMEM bytes: q,k,v tiles + f32 scratch."""
+    q = G * block_q * D * dtype_bytes
+    kv = 2 * block_k * D * dtype_bytes
+    scratch = (2 * G * block_q + G * block_q * D) * 4
+    return q + kv + scratch
+
+
+def run(quick: bool = True):
+    from repro.kernels.decode_attention import decode_attention
+    from repro.kernels.flash_prefill import flash_prefill
+    from repro.kernels.rglru_scan import rglru_scan
+    from repro.kernels.rwkv6_scan import rwkv6_scan
+
+    rng = np.random.default_rng(0)
+    r = lambda *s: jnp.asarray(rng.normal(size=s), jnp.float32)
+
+    print("\n== kernel interpret-mode microbench + VMEM accounting ==")
+    # flash prefill
+    B, T, Hq, Hkv, D = 1, 256, 8, 2, 128
+    q, k, v = r(B, T, Hq, D), r(B, T, Hkv, D), r(B, T, Hkv, D)
+    f = jax.jit(lambda q, k, v: flash_prefill(
+        q, k, v, causal=True, block_q=128, block_k=128, interpret=True))
+    us = _time(f, q, k, v)
+    ws = vmem_working_set(128, 128, Hq // Hkv, D)
+    print(f"  flash_prefill  {us:10.0f} us/call   VMEM working set "
+          f"{ws/1024:.0f} KiB (<16 MiB ok)")
+    emit("kernel_flash_prefill", us, f"vmem_kib={ws/1024:.0f}")
+    assert ws < 16 * 2 ** 20
+
+    # decode attention
+    S = 2048
+    q1, kc, vc = r(B, Hq, D), r(B, S, Hkv, D), r(B, S, Hkv, D)
+    lens = jnp.asarray([S], jnp.int32)
+    f = jax.jit(lambda a, b, c, d: decode_attention(
+        a, b, c, d, block_s=512, interpret=True))
+    us = _time(f, q1, kc, vc, lens)
+    ws = (512 * D * 2 * 2) + (Hq // Hkv) * (2 + D) * 4
+    print(f"  decode_attn    {us:10.0f} us/call   VMEM working set "
+          f"{ws/1024:.0f} KiB")
+    emit("kernel_decode_attention", us, f"vmem_kib={ws/1024:.0f}")
+
+    # rglru
+    la, b_, h0 = -jnp.abs(r(2, 256, 256)) * 0.1, r(2, 256, 256), r(2, 256)
+    f = jax.jit(lambda a, b, h: rglru_scan(a, b, h, interpret=True))
+    us = _time(f, la, b_, h0)
+    print(f"  rglru_scan     {us:10.0f} us/call")
+    emit("kernel_rglru_scan", us, "ok")
+
+    # rwkv6
+    rr, kk, vv = r(1, 128, 2, 64), r(1, 128, 2, 64), r(1, 128, 2, 64)
+    ww = jnp.asarray(rng.uniform(0.8, 0.999, (1, 128, 2, 64)), jnp.float32)
+    uu = r(2, 64) * 0.1
+    f = jax.jit(lambda a, b, c, d, e: rwkv6_scan(a, b, c, d, e,
+                                                 interpret=True))
+    us = _time(f, rr, kk, vv, ww, uu)
+    print(f"  rwkv6_scan     {us:10.0f} us/call")
+    emit("kernel_rwkv6_scan", us, "ok")
+    return {}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,48 @@
+"""Paper Table 3: KV-cache generation rate of a full prefill node and the
+theoretical interconnect bandwidth the FuDG strategy would need."""
+from __future__ import annotations
+
+from benchmarks.common import emit, make_cost, timed
+from repro.configs import get_config
+from repro.simulator.cost_model import GPU_A800, GPU_L20
+
+
+PAPER = {  # model, hw, tp -> (paper tokens/s, paper GB/s)
+    ("llama-30b", "L20", 4): (6584.6, 9.796),
+    ("llama-30b", "A800", 2): (26189.2, 38.96),
+    ("codellama2-34b", "L20", 4): (6838.92, 1.25),
+    ("codellama2-34b", "A800", 2): (25978.88, 4.76),
+}
+
+
+def run(quick: bool = True):
+    print("\n== Table 3: KV generation rate vs required bandwidth ==")
+    print(f"{'model':18}{'hw':6}{'tok/s(sim)':>12}{'tok/s(paper)':>14}"
+          f"{'GB/s(sim)':>11}{'GB/s(paper)':>12}")
+    out = {}
+    for (model, hwname, tp), (ptok, pbw) in PAPER.items():
+        hw = GPU_L20 if hwname == "L20" else GPU_A800
+        cost = make_cost(model, hw, tp)
+        per_node = hw.devices_per_node // tp
+
+        def node_rate():
+            lens = [512] * 8
+            return per_node * sum(lens) / cost.prefill_time(lens)
+
+        rate, us = timed(node_rate)
+        bw = rate * cost.cfg.kv_bytes_per_token(2) / 1e9
+        print(f"{model:18}{hwname:6}{rate:12.0f}{ptok:14.1f}"
+              f"{bw:11.2f}{pbw:12.2f}")
+        emit(f"table3_{model}_{hwname}", us,
+             f"tok/s={rate:.0f};GBps={bw:.2f}")
+        out[f"{model}_{hwname}"] = {"tok_s": rate, "gbps": bw}
+    # the qualitative claims of Table 3
+    assert out["llama-30b_L20"]["gbps"] > 10e9 / 8 / 1e9, \
+        "MHA KV stream must exceed 10GbE"
+    assert out["codellama2-34b_L20"]["gbps"] < \
+        out["llama-30b_L20"]["gbps"] / 4, "GQA compresses KV"
+    return out
+
+
+if __name__ == "__main__":
+    run()

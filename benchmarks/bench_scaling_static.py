@@ -1,0 +1,41 @@
+"""Paper Fig. 9: static coarse-grained scaling — goodput vs #instances.
+The paper reports SUPERLINEAR P90 scaling (5.6x from 1 -> 4 instances for
+CodeLlama-34B): more instances give rolling activation more room to
+separate phases."""
+from __future__ import annotations
+
+from benchmarks.common import QUICK_DURATION, emit, make_cost, \
+    system_factory, timed
+from repro.core.slo import DATASET_SLOS
+from repro.simulator.cost_model import GPU_L20
+from repro.simulator.metrics import goodput
+from repro.simulator.workload import WORKLOADS
+
+
+def run(quick: bool = True):
+    model = "codellama2-34b"
+    cost = make_cost(model, GPU_L20, tp=4)
+    slo = DATASET_SLOS["sharegpt"]
+    profile = WORKLOADS["sharegpt"]
+    counts = [1, 2, 4] if quick else [1, 2, 4, 8]
+    print(f"\n== Fig 9: static scaling ({model}, ShareGPT, P90) ==")
+    out = {}
+    base = None
+    for n in counts:
+        fac = system_factory("ecoserve", cost, n, slo)
+        g, us = timed(goodput, fac, profile, slo, 0.90,
+                      duration=QUICK_DURATION, hi=128.0)
+        out[n] = g["goodput"]
+        base = base or (g["goodput"] or 1e-9)
+        ratio = g["goodput"] / base
+        print(f"  instances={n:2d}  goodput={g['goodput']:6.2f} req/s  "
+              f"({ratio:.2f}x vs 1 instance, linear would be {n}.0x)")
+        emit(f"fig9_scaling_n{n}", us, f"goodput={g['goodput']:.2f}")
+    if out.get(4) and out.get(1):
+        print(f"  scaling 1->4: {out[4] / out[1]:.2f}x "
+              f"(paper: superlinear, 5.6x)")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Shared helpers for the benchmark harness (one module per paper
+table/figure).  Every benchmark prints ``name,us_per_call,derived`` CSV
+rows plus a human-readable block, and returns a dict for run.py."""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Dict
+
+from repro.baselines import (DistServeSystem, MoonCakeSystem, SarathiSystem,
+                             VLLMSystem)
+from repro.configs import get_config
+from repro.core.padg_system import EcoServeSystem
+from repro.core.slo import DATASET_SLOS
+from repro.simulator.cost_model import (GPU_A800, GPU_L20, HardwareProfile,
+                                        InstanceCostModel)
+
+# quick mode keeps the full-suite wall time tractable on 1 CPU core
+QUICK_DURATION = 30.0
+FULL_DURATION = 120.0
+
+
+def make_cost(model: str = "llama-30b", hw: HardwareProfile = GPU_L20,
+              tp: int = 4, pp: int = 1) -> InstanceCostModel:
+    return InstanceCostModel(cfg=get_config(model), hw=hw, tp=tp, pp=pp)
+
+
+def system_factory(name: str, cost: InstanceCostModel, n_instances: int,
+                   slo, **kw) -> Callable[[], object]:
+    def make():
+        if name == "ecoserve":
+            return EcoServeSystem(cost, n_instances, slo)
+        if name == "ecoserve++":
+            return EcoServeSystem(cost, n_instances, slo, plus_plus=True)
+        if name == "vllm":
+            return VLLMSystem(cost, n_instances)
+        if name == "sarathi":
+            return SarathiSystem(cost, n_instances)
+        if name == "distserve":
+            return DistServeSystem(cost, n_instances,
+                                   prefill_ratio=kw.get("pr", 0.25))
+        if name == "mooncake":
+            return MoonCakeSystem(cost, n_instances,
+                                  prefill_ratio=kw.get("pr", 0.25))
+        raise KeyError(name)
+    return make
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")

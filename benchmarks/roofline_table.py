@@ -1,0 +1,58 @@
+"""Roofline table (deliverable g): reads the dry-run JSONs from
+experiments/dryrun and prints the 3-term roofline per (arch x shape x
+mesh) with the dominant bottleneck, MODEL_FLOPS ratio, and memory fit."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def load_results(variant: str = "baseline"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if r.get("variant", "baseline") == variant:
+            rows.append(r)
+    return rows
+
+
+def run(quick: bool = True):
+    rows = load_results()
+    ok = [r for r in rows if r["status"] == "ok"]
+    skipped = [r for r in rows if r["status"] == "skipped"]
+    if not rows:
+        print("no dry-run results found; run "
+              "`python -m repro.launch.dryrun --all` first")
+        return {}
+    print(f"\n== Roofline (bf16-projected, TPU v5e: 197TF/s, 819GB/s HBM, "
+          f"50GB/s link) ==")
+    print(f"{'arch':24}{'shape':13}{'mesh':12}{'compute_s':>10}"
+          f"{'memory_s':>10}{'collect_s':>10} {'dominant':10}"
+          f"{'useful':>7}{'fits':>6}")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        print(f"{r['arch']:24}{r['shape']:13}{r['mesh']:12}"
+              f"{t['compute_s']:10.4f}{t['memory_s']:10.4f}"
+              f"{t['collective_s']:10.4f} {t['dominant']:10}"
+              f"{r['useful_flops_ratio']:7.3f}"
+              f"{'  yes' if r['memory']['fits_hbm'] else '   NO'}")
+    print(f"\nskips ({len(skipped)}):")
+    for r in skipped:
+        print(f"  {r['arch']:24}{r['shape']:13}{r['mesh']:12} {r['reason']}")
+    n_ok = len(ok)
+    emit("roofline_combos_ok", 0.0, f"{n_ok}")
+    dominated = {}
+    for r in ok:
+        dominated.setdefault(r["roofline"]["dominant"], 0)
+        dominated[r["roofline"]["dominant"]] += 1
+    print(f"\ndominant-term histogram: {dominated}")
+    return {"ok": n_ok, "skipped": len(skipped), "dominant": dominated}
+
+
+if __name__ == "__main__":
+    run()

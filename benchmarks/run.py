@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]``
+
+Each benchmark prints ``name,us_per_call,derived`` CSV rows plus a
+human-readable block.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+BENCHES = [
+    ("table2_arithmetic_intensity", "benchmarks.bench_arithmetic_intensity"),
+    ("table3_kv_bandwidth", "benchmarks.bench_kv_bandwidth"),
+    ("fig8_e2e_goodput", "benchmarks.bench_e2e_goodput"),
+    ("fig9_static_scaling", "benchmarks.bench_scaling_static"),
+    ("fig10_dynamic_scaling", "benchmarks.bench_scaling_dynamic"),
+    ("fig11_pp_compat", "benchmarks.bench_pp_compat"),
+    ("table5_cost_effectiveness", "benchmarks.bench_cost_effectiveness"),
+    ("ablation_macro_and_variants", "benchmarks.bench_ablation_macro"),
+    ("roofline_table", "benchmarks.roofline_table"),
+    ("kernel_microbench", "benchmarks.bench_kernels"),
+]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="full sweeps (slow); default is quick mode")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    import importlib
+    rc = 0
+    for name, module in BENCHES:
+        if args.only and args.only not in name:
+            continue
+        print(f"\n{'=' * 72}\nBENCH {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(module)
+            mod.run(quick=not args.full)
+            print(f"[{name}] OK in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            rc = 1
+            print(f"[{name}] FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,44 @@
+"""Regenerate the §Roofline markdown table from experiments/dryrun JSONs.
+Usage: PYTHONPATH=src python scripts_gen_roofline_md.py > /tmp/roofline.md
+"""
+import glob
+import json
+
+rows = []
+for f in sorted(glob.glob("experiments/dryrun/*.json")):
+    rows.append(json.load(open(f)))
+
+print("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+      " dominant | useful | fits bf16 HBM |")
+print("|---|---|---|---|---|---|---|---|---|")
+for r in sorted((r for r in rows if r["status"] == "ok" and
+                 r.get("variant", "baseline") == "baseline"),
+                key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+    t = r["roofline"]
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+          f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+          f"| {t['collective_s']:.4f} | **{t['dominant']}** "
+          f"| {r['useful_flops_ratio']:.3f} "
+          f"| {'yes' if r['memory']['fits_hbm'] else 'NO'} |")
+
+print("\nSkipped combinations:\n")
+print("| arch | shape | mesh | reason |")
+print("|---|---|---|---|")
+for r in sorted((r for r in rows if r["status"] == "skipped"),
+                key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['reason']} |")
+
+print("\nPerf variants:\n")
+print("| arch | shape | mesh | variant | compute_s | memory_s |"
+      " collective_s | dominant | peak GB/dev (bf16) | fits |")
+print("|---|---|---|---|---|---|---|---|---|---|")
+for r in sorted((r for r in rows if r["status"] == "ok" and
+                 r.get("variant", "baseline") != "baseline"),
+                key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                               r["variant"])):
+    t = r["roofline"]
+    print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['variant']} "
+          f"| {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+          f"| {t['collective_s']:.4f} | {t['dominant']} "
+          f"| {r['memory']['peak_bytes_bf16_projected']/1e9:.1f} "
+          f"| {'yes' if r['memory']['fits_hbm'] else 'NO'} |")

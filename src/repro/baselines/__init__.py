@@ -1,0 +1,4 @@
+from repro.baselines.nodg_vllm import VLLMSystem          # noqa: F401
+from repro.baselines.nodg_sarathi import SarathiSystem    # noqa: F401
+from repro.baselines.fudg_distserve import DistServeSystem  # noqa: F401
+from repro.baselines.fudg_mooncake import MoonCakeSystem  # noqa: F401

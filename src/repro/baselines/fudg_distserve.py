@@ -1,0 +1,79 @@
+"""DistServe-style intra-node FuDG baseline (paper §4.1 baseline 3).
+
+Each node hosts prefill instances and decode instances; the KV cache of
+every request crosses the node's internal interconnect (PCIe on the
+paper's L20 cluster — no NVLink) from prefill to decode instance.  TP
+traffic and KV migration contend for that link; we model the contention
+with a per-node FIFO link.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.instance import Instance
+from repro.core.request import Request, RequestState
+from repro.simulator.cost_model import InstanceCostModel
+from repro.simulator.engine import Link, SimulationEngine
+
+
+class _PrefillInstance(Instance):
+    decode_here = False
+
+
+class DistServeSystem:
+    def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
+                 prefill_ratio: float = 0.5, n_nodes: int = None):
+        """``n_instances`` total; a ``prefill_ratio`` fraction become
+        prefill instances, the rest decode instances, colocated per node."""
+        self.cost = cost
+        n_prefill = max(1, round(n_instances * prefill_ratio))
+        n_decode = max(1, n_instances - n_prefill)
+        self.prefill_insts: List[Instance] = [
+            _PrefillInstance(i, cost, cost.kv_capacity_tokens())
+            for i in range(n_prefill)
+        ]
+        self.decode_insts: List[Instance] = [
+            Instance(1000 + i, cost, cost.kv_capacity_tokens())
+            for i in range(n_decode)
+        ]
+        self.instances = self.prefill_insts + self.decode_insts
+        # instances per node (both kinds share the node's PCIe link)
+        per_node = max(1, cost.hw.devices_per_node // cost.devices)
+        n_nodes = n_nodes or -(-n_instances // per_node)
+        self.links: Dict[int, Link] = {
+            n: Link(f"pcie-node{n}", cost.hw.intra_node_bw)
+            for n in range(n_nodes)
+        }
+        self._node_of: Dict[int, int] = {}
+        for idx, inst in enumerate(self.instances):
+            self._node_of[inst.iid] = (idx // per_node) % n_nodes
+
+    # ------------------------------------------------------------------ #
+    def submit(self, req: Request, now: float,
+               engine: SimulationEngine) -> None:
+        inst = min(self.prefill_insts,
+                   key=lambda i: sum(r.prompt_len for r in i.pending))
+        inst.admit(req, now)
+        engine.activate(inst)
+
+    def on_slot_end(self, inst, kind, reqs: List[Request], now,
+                    engine: SimulationEngine) -> None:
+        if kind != "prefill_handoff":
+            return
+        link = self.links[self._node_of[inst.iid]]
+        for r in reqs:
+            target = min(self.decode_insts, key=lambda i: i.kv_tokens_used())
+            nbytes = self.cost.kv_transfer_bytes(r.prompt_len)
+            done_t = link.transfer(nbytes, now)
+
+            def deliver(r=r, target=target):
+                r.state = RequestState.DECODING
+                if r.tokens_generated >= r.output_len:
+                    r.state = RequestState.FINISHED
+                    r.finish_time = engine.now
+                    engine.finished.append(r)
+                    return
+                target.decoding.append(r)
+                engine.activate(target)
+
+            engine.push(done_t, deliver)

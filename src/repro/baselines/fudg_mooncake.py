@@ -1,0 +1,77 @@
+"""MoonCake-style inter-node FuDG baseline (paper §4.1 baseline 4).
+
+Prefill and decode instances live on different nodes; KV caches travel
+through a centralized pool: prefill node NIC -> pool -> decode node NIC,
+i.e. ALWAYS two NIC traversals even when instances share a node (the
+paper notes this explicitly).  Ethernet NICs are per-node FIFO links.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.core.instance import Instance
+from repro.core.request import Request, RequestState
+from repro.simulator.cost_model import InstanceCostModel
+from repro.simulator.engine import Link, SimulationEngine
+
+
+class _PrefillInstance(Instance):
+    decode_here = False
+
+
+class MoonCakeSystem:
+    def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
+                 prefill_ratio: float = 0.5):
+        self.cost = cost
+        n_prefill = max(1, round(n_instances * prefill_ratio))
+        n_decode = max(1, n_instances - n_prefill)
+        self.prefill_insts = [
+            _PrefillInstance(i, cost, cost.kv_capacity_tokens())
+            for i in range(n_prefill)
+        ]
+        self.decode_insts = [
+            Instance(1000 + i, cost, cost.kv_capacity_tokens())
+            for i in range(n_decode)
+        ]
+        self.instances = self.prefill_insts + self.decode_insts
+        # one instance per node (the paper's deployment to ease bandwidth
+        # contention); each node's NIC is a FIFO link
+        self.nic: Dict[int, Link] = {
+            inst.iid: Link(f"nic-{inst.iid}", cost.hw.inter_node_bw)
+            for inst in self.instances
+        }
+
+    def submit(self, req: Request, now: float,
+               engine: SimulationEngine) -> None:
+        inst = min(self.prefill_insts,
+                   key=lambda i: sum(r.prompt_len for r in i.pending))
+        inst.admit(req, now)
+        engine.activate(inst)
+
+    def on_slot_end(self, inst, kind, reqs: List[Request], now,
+                    engine: SimulationEngine) -> None:
+        if kind != "prefill_handoff":
+            return
+        src_nic = self.nic[inst.iid]
+        for r in reqs:
+            target = min(self.decode_insts, key=lambda i: i.kv_tokens_used())
+            nbytes = self.cost.kv_transfer_bytes(r.prompt_len)
+            t_up = src_nic.transfer(nbytes, now)           # prefill -> pool
+
+            def stage2(r=r, target=target, nbytes=nbytes):
+                dst_nic = self.nic[target.iid]
+                t_down = dst_nic.transfer(nbytes, engine.now)  # pool -> decode
+
+                def deliver(r=r, target=target):
+                    r.state = RequestState.DECODING
+                    if r.tokens_generated >= r.output_len:
+                        r.state = RequestState.FINISHED
+                        r.finish_time = engine.now
+                        engine.finished.append(r)
+                        return
+                    target.decoding.append(r)
+                    engine.activate(target)
+
+                engine.push(t_down, deliver)
+
+            engine.push(t_up, stage2)

@@ -1,0 +1,102 @@
+"""Sarathi-style NoDG baseline: hybrid batching + chunked prefill,
+decode-priority (paper §4.1 baseline 2).
+
+Every iteration fuses the running decode batch with up to ``chunk_tokens``
+of prefill work taken from the head of the prompt queue; a prompt's
+prefill spreads over several iterations, re-reading its KV prefix each
+time (the overhead the paper calls out).
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.core.instance import Instance
+from repro.core.request import Request, RequestState
+from repro.simulator.cost_model import InstanceCostModel
+from repro.simulator.engine import SimulationEngine
+
+
+class SarathiInstance(Instance):
+    def __init__(self, iid, executor, kv_capacity_tokens,
+                 chunk_tokens: int = 512, **kw):
+        super().__init__(iid, executor, kv_capacity_tokens, **kw)
+        self.chunk_tokens = chunk_tokens
+        self._progress = {}        # rid -> prefilled tokens
+
+    def next_slot(self, now: float):
+        if not self.pending and not self.decoding:
+            self.phase = "idle"
+            return "idle", 0.0, []
+        # build the chunk set from pending prompts (decode-priority: the
+        # decode batch always rides along; chunks fill the leftover budget)
+        chunks: List[Tuple[Request, int, int]] = []   # (req, chunk, prefix)
+        budget = self.chunk_tokens
+        for r in self.pending:
+            if budget <= 0:
+                break
+            done = self._progress.get(r.rid, 0)
+            take = min(budget, r.prompt_len - done)
+            if take > 0:
+                chunks.append((r, take, done))
+                budget -= take
+        decode_batch = self.decoding[: self.max_decode_batch]
+        dur = self.executor.hybrid_time(
+            [c[1] for c in chunks], [c[2] for c in chunks],
+            len(decode_batch), [r.kv_tokens() for r in decode_batch])
+        self.phase = "hybrid"
+        self._current_chunks = chunks
+        return "hybrid", dur, decode_batch
+
+    def complete_slot(self, kind: str, reqs, t_end: float):
+        finished = []
+        if kind != "hybrid":
+            return super().complete_slot(kind, reqs, t_end)
+        # decode side
+        for r in reqs:
+            r.tokens_generated += 1
+            if r.tokens_generated == 2:
+                r.second_token_time = t_end
+            if r.tokens_generated >= r.output_len:
+                r.state = RequestState.FINISHED
+                r.finish_time = t_end
+                self.decoding.remove(r)
+                finished.append(r)
+        # prefill chunks
+        for r, take, done in self._current_chunks:
+            new_done = done + take
+            self._progress[r.rid] = new_done
+            if new_done >= r.prompt_len:
+                self.pending.remove(r)
+                del self._progress[r.rid]
+                r.first_token_time = t_end
+                r.tokens_generated = 1
+                if r.tokens_generated >= r.output_len:
+                    r.state = RequestState.FINISHED
+                    r.finish_time = t_end
+                    finished.append(r)
+                else:
+                    r.state = RequestState.DECODING
+                    self.decoding.append(r)
+        self._current_chunks = []
+        self._finished.extend(finished)
+        return finished
+
+
+class SarathiSystem:
+    def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
+                 chunk_tokens: int = 512):
+        self.cost = cost
+        self.instances: List[Instance] = [
+            SarathiInstance(i, cost, cost.kv_capacity_tokens(),
+                            chunk_tokens=chunk_tokens)
+            for i in range(n_instances)
+        ]
+
+    def submit(self, req: Request, now: float,
+               engine: SimulationEngine) -> None:
+        inst = min(self.instances, key=lambda i: i.kv_tokens_used())
+        inst.admit(req, now)
+        engine.activate(inst)
+
+    def on_slot_end(self, inst, kind, reqs, now, engine) -> None:
+        pass

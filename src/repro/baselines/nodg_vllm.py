@@ -1,0 +1,34 @@
+"""vLLM-style NoDG baseline: independent replicas, separate batching,
+prefill-priority scheduling (paper §4.1 baseline 1).
+
+Each instance handles the full request lifecycle; requests are routed to
+the least-loaded replica immediately on arrival, so prefills constantly
+interrupt decodes on every replica — the interference PaDG removes.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.instance import Instance
+from repro.core.request import Request
+from repro.simulator.cost_model import InstanceCostModel
+from repro.simulator.engine import SimulationEngine
+
+
+class VLLMSystem:
+    def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None):
+        self.cost = cost
+        self.instances: List[Instance] = [
+            Instance(i, cost, kv_capacity_tokens=cost.kv_capacity_tokens())
+            for i in range(n_instances)
+        ]
+
+    def submit(self, req: Request, now: float,
+               engine: SimulationEngine) -> None:
+        # least outstanding KV tokens = least loaded
+        inst = min(self.instances, key=lambda i: i.kv_tokens_used())
+        inst.admit(req, now)
+        engine.activate(inst)
+
+    def on_slot_end(self, inst, kind, reqs, now, engine) -> None:
+        pass

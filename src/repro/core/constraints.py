@@ -1,0 +1,59 @@
+"""Algorithm 2: Constraint Checking (verbatim from the paper).
+
+Given an instance's status and an incoming request, verify that admitting
+the request violates neither the TTFT SLO (constraint 1), the TPOT SLO of
+the decodes already running there (constraint 2), nor the KV-cache memory
+capacity (constraint 3).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from repro.core.instance import InstanceStatus
+from repro.core.request import Request
+from repro.core.slo import SLO
+
+
+def check_constraints(
+    status: InstanceStatus,
+    req: Request,
+    slo: SLO,
+    predict_prefill: Callable[[int], float],
+    now: float,
+    *,
+    expected_kv_tokens: Optional[int] = None,
+    conservative: bool = False,
+) -> bool:
+    # ---- Constraint 1: TTFT ------------------------------------------- #
+    # pending prefills admitted since the phase switch, plus the new one
+    t_total = sum(predict_prefill(n) for n in status.pending_prefill_lens)
+    t_total += predict_prefill(req.prompt_len)
+    # requests queue behind the prefills already pending on this instance;
+    # the elapsed wait of the new request also counts against its TTFT
+    already_waited = max(0.0, now - req.arrival_time)
+    if t_total + already_waited > slo.ttft:
+        return False
+
+    # ---- Constraint 2: TPOT ------------------------------------------- #
+    # inserting t_total of prefill work delays every running decode by
+    # t_total; each decode has accumulated `saved_tpot` slack (line 15)
+    if status.saved_tpots:
+        if conservative:   # EcoServe++: protect the youngest decode too
+            if min(status.saved_tpots) < t_total:
+                return False
+        else:              # paper Algorithm 2 line 16: mean
+            mean_saved = sum(status.saved_tpots) / len(status.saved_tpots)
+            if mean_saved < t_total:
+                return False
+    # 2b: the request's own decode joins the batch — the projected decode
+    # iteration time must stay within the TPOT SLO ("prioritizing the
+    # maintenance of satisfactory TPOT", §3.4)
+    if status.decode_iter_time_plus_one > slo.tpot:
+        return False
+
+    # ---- Constraint 3: KV cache capacity ------------------------------ #
+    want = expected_kv_tokens if expected_kv_tokens is not None else (
+        req.prompt_len * 2)   # prompt + headroom for generation
+    if want > status.kv_tokens_free:
+        return False
+    return True

@@ -1,0 +1,252 @@
+"""Instance: one model replica with temporal prefill/decode disaggregation.
+
+This is the paper's *instance scheduler* (Fig. 5 step 5).  The instance is
+execution-backend agnostic: durations come from an ``ExecutorModel``
+(analytical cost model in the simulator; measured wall-clock in the
+real-exec engine).  Scheduling policy (PaDG intra-instance rule):
+
+  * prefills are prioritized — whenever admitted prefills are pending,
+    the next slot is a prefill batch;
+  * otherwise run one decode iteration over the running batch;
+  * each slot is an uninterruptible unit of work (phase switches happen
+    only at slot boundaries, which is what makes the disaggregation
+    *temporal*).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Protocol, Tuple
+
+from repro.core.request import Request, RequestState
+
+
+class ExecutorModel(Protocol):
+    def prefill_time(self, prompt_lens: List[int]) -> float: ...
+    def decode_time(self, batch_size: int, ctx_lens: List[int]) -> float: ...
+    # optional (EcoServe-CP): fused decode+chunk iteration
+    # def hybrid_time(self, chunk_lens, prefix_lens, batch, ctxs): ...
+
+
+@dataclasses.dataclass
+class InstanceStatus:
+    """What the instance periodically reports to its macro-instance
+    scheduler (decode progress, memory, phase)."""
+    iid: int
+    phase: str                       # prefill | decode | idle
+    pending_prefill_lens: List[int]
+    pending_prefill_tokens: int
+    num_decoding: int
+    saved_tpots: List[float]
+    kv_tokens_used: int
+    kv_tokens_capacity: int
+    last_switch_time: float
+    # projected decode iteration time if one more request joins the batch
+    # (guards TPOT against unbounded decode-batch growth)
+    decode_iter_time_plus_one: float = 0.0
+
+    @property
+    def kv_tokens_free(self) -> int:
+        return self.kv_tokens_capacity - self.kv_tokens_used
+
+
+class Instance:
+    """Simulation-state instance; also the scheduling brain reused by the
+    real-exec engine (which overrides the executor with measured times)."""
+
+    def __init__(self, iid: int, executor: ExecutorModel,
+                 kv_capacity_tokens: int,
+                 max_prefill_tokens: int = 16_384,
+                 max_decode_batch: int = 256,
+                 slo_tpot: Optional[float] = None,
+                 slo_ttft: Optional[float] = None,
+                 conservative_slack: bool = False,
+                 chunked_fallback: int = 0):
+        self.iid = iid
+        self.executor = executor
+        self.kv_capacity_tokens = kv_capacity_tokens
+        self.max_prefill_tokens = max_prefill_tokens
+        self.max_decode_batch = max_decode_batch
+        # PaDG intra-instance rule (§3.1): with a TPOT SLO known, the
+        # instance keeps decoding until its decodes have accumulated
+        # enough slack to absorb the pending prefill slot.  None disables
+        # the guard (NoDG baselines are strictly prefill-prioritized).
+        self.slo_tpot = slo_tpot
+        self.slo_ttft = slo_ttft
+        self.conservative_slack = conservative_slack  # EcoServe++ (min slack)
+        # EcoServe-CP (beyond-paper): when decode slack is too thin for a
+        # full prefill slot, ride `chunked_fallback` prefill tokens along
+        # with the decode iteration (Sarathi-style chunk INSIDE PaDG) so
+        # TTFT progresses without stalling decodes.  0 disables.
+        self.chunked_fallback = chunked_fallback
+        self._chunk_progress: dict = {}
+        self._current_chunks: List = []
+
+        self.pending: List[Request] = []      # admitted, waiting for prefill
+        self.decoding: List[Request] = []
+        self.phase = "idle"
+        self.last_switch_time = 0.0
+        self.busy_until = 0.0
+        self._finished: List[Request] = []
+
+    # ----------------------------------------------------------------- #
+    def admit(self, req: Request, now: float) -> None:
+        req.state = RequestState.PENDING
+        req.admitted_time = now
+        req.instance_id = self.iid
+        self.pending.append(req)
+
+    def kv_tokens_used(self) -> int:
+        used = sum(r.kv_tokens() for r in self.decoding)
+        used += sum(r.prompt_len for r in self.pending)
+        return used
+
+    def status(self, now: float, slo_tpot: float) -> InstanceStatus:
+        # memoized per (now, slo): Algorithm 1 probes every instance for
+        # every queued request at each slot boundary
+        cached = getattr(self, "_status_cache", None)
+        if cached is not None and cached[0] == (now, slo_tpot,
+                                                len(self.pending),
+                                                len(self.decoding)):
+            return cached[1]
+        st = self._status(now, slo_tpot)
+        self._status_cache = ((now, slo_tpot, len(self.pending),
+                               len(self.decoding)), st)
+        return st
+
+    def _status(self, now: float, slo_tpot: float) -> InstanceStatus:
+        n_next = min(len(self.decoding) + 1, self.max_decode_batch)
+        ctxs = [r.kv_tokens() for r in self.decoding][: n_next - 1]
+        return InstanceStatus(
+            iid=self.iid,
+            phase=self.phase,
+            pending_prefill_lens=[r.prompt_len for r in self.pending],
+            pending_prefill_tokens=sum(r.prompt_len for r in self.pending),
+            num_decoding=len(self.decoding),
+            saved_tpots=[r.saved_tpot(now, slo_tpot) for r in self.decoding],
+            kv_tokens_used=self.kv_tokens_used(),
+            kv_tokens_capacity=self.kv_capacity_tokens,
+            last_switch_time=self.last_switch_time,
+            decode_iter_time_plus_one=self.executor.decode_time(
+                n_next, ctxs + [512]),
+        )
+
+    # ----------------------------------------------------------------- #
+    def next_slot(self, now: float) -> Tuple[str, float, List[Request]]:
+        """Decide and 'execute' the next slot starting at ``now``.
+
+        Returns (kind, duration, affected requests).  kind == "idle" means
+        nothing to do.  The caller (event engine) applies completion at
+        now + duration via ``complete_slot``.
+        """
+        if self.pending and self._slack_allows_prefill(now):
+            batch: List[Request] = []
+            tokens = 0
+            for r in self.pending:
+                remaining = r.prompt_len - self._chunk_progress.get(r.rid, 0)
+                if batch and tokens + remaining > self.max_prefill_tokens:
+                    break
+                batch.append(r)
+                tokens += remaining
+            dur = self.executor.prefill_time(
+                [r.prompt_len - self._chunk_progress.get(r.rid, 0)
+                 for r in batch])
+            if self.phase != "prefill":
+                self.phase = "prefill"
+                self.last_switch_time = now
+            return "prefill", dur, batch
+        if self.decoding:
+            batch = self.decoding[: self.max_decode_batch]
+            if self.pending and self.chunked_fallback:
+                # EcoServe-CP: hybrid iteration (decode + prefill chunk)
+                chunks = []
+                budget = self.chunked_fallback
+                for r in self.pending:
+                    if budget <= 0:
+                        break
+                    done = self._chunk_progress.get(r.rid, 0)
+                    take = min(budget, r.prompt_len - done)
+                    if take > 0:
+                        chunks.append((r, take, done))
+                        budget -= take
+                dur = self.executor.hybrid_time(
+                    [c[1] for c in chunks], [c[2] for c in chunks],
+                    len(batch), [r.kv_tokens() for r in batch])
+                self._current_chunks = chunks
+                self.phase = "hybrid"
+                return "hybrid", dur, batch
+            dur = self.executor.decode_time(
+                len(batch), [r.kv_tokens() for r in batch])
+            if self.phase != "decode":
+                self.phase = "decode"
+                self.last_switch_time = now
+            return "decode", dur, batch
+        self.phase = "idle"
+        return "idle", 0.0, []
+
+    def _slack_allows_prefill(self, now: float) -> bool:
+        """§3.1: execute decodes until enough TPOT slack has accumulated to
+        absorb the pending prefill slot without violating running decodes."""
+        if self.slo_tpot is None or not self.decoding:
+            return True
+        dur = self.executor.prefill_time([r.prompt_len for r in self.pending])
+        # anti-starvation: a pending prefill nearing its TTFT budget wins
+        if self.slo_ttft is not None:
+            oldest = min(r.arrival_time for r in self.pending)
+            if now - oldest + dur > 0.6 * self.slo_ttft:
+                return True
+        saved = [r.saved_tpot(now, self.slo_tpot) for r in self.decoding]
+        slack = min(saved) if self.conservative_slack else (
+            sum(saved) / len(saved))
+        return slack >= dur
+
+    def complete_slot(self, kind: str, reqs: List[Request],
+                      t_end: float) -> List[Request]:
+        """Apply slot completion; returns requests finished in this slot."""
+        finished: List[Request] = []
+        if kind == "prefill":
+            for r in reqs:
+                self.pending.remove(r)
+                self._chunk_progress.pop(r.rid, None)
+                r.first_token_time = t_end
+                r.tokens_generated = 1
+                if r.tokens_generated >= r.output_len:
+                    r.state = RequestState.FINISHED
+                    r.finish_time = t_end
+                    finished.append(r)
+                else:
+                    r.state = RequestState.DECODING
+                    self.decoding.append(r)
+        elif kind in ("decode", "hybrid"):
+            for r in reqs:
+                r.tokens_generated += 1
+                if r.tokens_generated == 2:
+                    r.second_token_time = t_end
+                if r.tokens_generated >= r.output_len:
+                    r.state = RequestState.FINISHED
+                    r.finish_time = t_end
+                    self.decoding.remove(r)
+                    finished.append(r)
+            if kind == "hybrid":
+                for r, take, done in self._current_chunks:
+                    new_done = done + take
+                    self._chunk_progress[r.rid] = new_done
+                    if new_done >= r.prompt_len:
+                        self.pending.remove(r)
+                        del self._chunk_progress[r.rid]
+                        r.first_token_time = t_end
+                        r.tokens_generated = 1
+                        if r.tokens_generated >= r.output_len:
+                            r.state = RequestState.FINISHED
+                            r.finish_time = t_end
+                            finished.append(r)
+                        else:
+                            r.state = RequestState.DECODING
+                            self.decoding.append(r)
+                self._current_chunks = []
+        self._finished.extend(finished)
+        return finished
+
+    # ----------------------------------------------------------------- #
+    @property
+    def busy(self) -> bool:
+        return bool(self.pending or self.decoding)

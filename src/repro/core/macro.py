@@ -1,0 +1,87 @@
+"""Macro instance: rolling activation + Algorithm 1 (inter-instance routing).
+
+A macro instance is EcoServe's basic serving unit: N instances whose
+prefill phases are staggered in time.  The scheduler routes each incoming
+request *stickily* to the most recently used instance; when that instance
+fails the constraint check, it cycles to the next one — this cyclic
+hand-off IS the rolling activation (the paper's Fig. 5 step 2).
+"""
+from __future__ import annotations
+
+from typing import Callable, List, Optional
+
+from repro.core.constraints import check_constraints
+from repro.core.instance import Instance
+from repro.core.request import Request
+from repro.core.slo import SLO
+
+
+class MacroInstance:
+    def __init__(self, mid: int, instances: List[Instance], slo: SLO,
+                 predict_prefill: Callable[[int], float],
+                 conservative: bool = False):
+        self.mid = mid
+        self.instances: List[Instance] = list(instances)
+        self.slo = slo
+        self.predict_prefill = predict_prefill
+        self.conservative = conservative       # EcoServe++ admission
+        self._active_idx = 0      # sticky pointer (Algorithm 1 line 2)
+        self.rejected = 0
+
+    # ------------------------------------------------------------------ #
+    def route(self, req: Request, now: float) -> Optional[Instance]:
+        """Algorithm 1: try the instance that admitted the previous request;
+        on constraint failure check the next instance, cyclically.  Returns
+        the chosen instance (request admitted) or None if no instance can
+        satisfy the constraints right now."""
+        n = len(self.instances)
+        if n == 0:
+            return None
+        for k in range(n):
+            idx = (self._active_idx + k) % n
+            inst = self.instances[idx]
+            status = inst.status(now, self.slo.tpot)
+            if check_constraints(status, req, self.slo,
+                                 self.predict_prefill, now,
+                                 conservative=self.conservative):
+                self._active_idx = idx
+                inst.admit(req, now)
+                return inst
+        return None
+
+    def route_forced(self, req: Request, now: float) -> Instance:
+        """Admission of last resort (SLO already lost): pick the instance
+        with the most free KV memory so the request still completes."""
+        inst = max(self.instances,
+                   key=lambda i: i.kv_capacity_tokens - i.kv_tokens_used())
+        self.rejected += 1
+        inst.admit(req, now)
+        self._active_idx = self.instances.index(inst)
+        return inst
+
+    # ------------------------------------------------------------------ #
+    def add_instance(self, inst: Instance) -> None:
+        self.instances.append(inst)
+
+    def remove_instance(self) -> Optional[Instance]:
+        """Remove (and return) the emptiest instance for migration/scaling;
+        its in-flight requests stay on it until drained — the caller keeps
+        stepping it but routes no new work (paper: migration is triggered
+        during the decode phase and never interrupts execution)."""
+        if not self.instances:
+            return None
+        inst = min(self.instances, key=lambda i: i.kv_tokens_used())
+        self.instances.remove(inst)
+        self._active_idx = 0 if not self.instances else (
+            self._active_idx % len(self.instances))
+        return inst
+
+    @property
+    def size(self) -> int:
+        return len(self.instances)
+
+    def utilization(self, now: float) -> float:
+        if not self.instances:
+            return 0.0
+        busy = sum(1 for i in self.instances if i.busy)
+        return busy / len(self.instances)

@@ -1,0 +1,183 @@
+"""Mitosis scaling (paper §3.5) + the serializable InstanceHandler proxy.
+
+Expansion: instances are added to a macro instance until its size exceeds
+``N_u``; then a new macro instance of ``N_l`` instances splits off
+(Fig. 7 step 2).  Further instances go to the original until it is full
+again, then to the new one.
+
+Contraction: instances are removed from the smallest macro instance until
+it reaches ``N_l``; then from a full one; when the two smallest macro
+instances together hold ``N_u`` instances, they merge after one more
+removal (Fig. 7 steps 5-8).
+
+Migration between macro instances moves an ``InstanceHandler`` — a
+pickle-serializable proxy (actor id, worker address, callable registry
+reference) — NOT the instance process itself: the instance keeps executing
+through the move (<100 ms in the paper; a pickle round-trip here).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core.instance import Instance
+from repro.core.macro import MacroInstance
+from repro.core.request import Request
+from repro.core.slo import SLO
+
+# process-local registry standing in for the RPC actor table: handlers
+# resolve their instance through it after deserialization, which is what
+# makes migration purely *logical* (no re-initialization).
+_ACTOR_REGISTRY: Dict[int, Instance] = {}
+
+
+def register_instance(inst: Instance) -> None:
+    _ACTOR_REGISTRY[inst.iid] = inst
+
+
+@dataclasses.dataclass
+class InstanceHandler:
+    """Serializable proxy for an instance (paper §3.5.2)."""
+    actor_id: int
+    worker_address: str
+    capabilities: Dict[str, Any]
+
+    def resolve(self) -> Instance:
+        return _ACTOR_REGISTRY[self.actor_id]
+
+    def serialize(self) -> bytes:
+        return pickle.dumps(self)
+
+    @staticmethod
+    def deserialize(blob: bytes) -> "InstanceHandler":
+        return pickle.loads(blob)
+
+    @staticmethod
+    def for_instance(inst: Instance, address: str = "local:0",
+                     **caps: Any) -> "InstanceHandler":
+        register_instance(inst)
+        return InstanceHandler(actor_id=inst.iid, worker_address=address,
+                               capabilities=dict(caps))
+
+
+@dataclasses.dataclass
+class MigrationRecord:
+    src_macro: int
+    dst_macro: int
+    actor_id: int
+    seconds: float
+
+
+class OverallScheduler:
+    """Top-level scheduler: dispatches to macro instances and runs the
+    mitosis expansion/contraction state machine."""
+
+    def __init__(self, slo: SLO, predict_prefill: Callable[[int], float],
+                 n_lower: int = 4, n_upper: int = 16,
+                 conservative: bool = False):
+        assert 1 <= n_lower <= n_upper
+        self.slo = slo
+        self.predict_prefill = predict_prefill
+        self.n_lower = n_lower
+        self.n_upper = n_upper
+        self.conservative = conservative
+        self.macros: List[MacroInstance] = []
+        self._next_mid = 0
+        self.migrations: List[MigrationRecord] = []
+
+    # ---------------- dispatch ---------------------------------------- #
+    def dispatch(self, req: Request, now: float) -> Instance:
+        """Route to macro instances (least-loaded first); fall back to
+        forced admission on the emptiest one."""
+        order = sorted(self.macros, key=lambda m: m.utilization(now))
+        for m in order:
+            inst = m.route(req, now)
+            if inst is not None:
+                return inst
+        return order[0].route_forced(req, now)
+
+    # ---------------- expansion --------------------------------------- #
+    def new_macro(self, instances: List[Instance]) -> MacroInstance:
+        m = MacroInstance(self._next_mid, instances, self.slo,
+                          self.predict_prefill,
+                          conservative=self.conservative)
+        self._next_mid += 1
+        self.macros.append(m)
+        return m
+
+    def add_instance(self, inst: Instance) -> MacroInstance:
+        """Mitosis expansion: fill the largest non-full macro instance;
+        split when it would exceed N_u."""
+        register_instance(inst)
+        if not self.macros:
+            return self.new_macro([inst])
+        candidates = [m for m in self.macros if m.size < self.n_upper]
+        if candidates:
+            # fill the fullest non-full macro first (Fig. 7 steps 1 & 3)
+            target = max(candidates, key=lambda m: m.size)
+            target.add_instance(inst)
+            return target
+        # all full -> split: N_l instances seed a new macro (step 2)
+        target = max(self.macros, key=lambda m: m.size)
+        seeds = [target.remove_instance() for _ in range(self.n_lower - 1)]
+        seeds = [s for s in seeds if s is not None] + [inst]
+        new = self.new_macro(seeds)
+        for s in seeds[:-1]:
+            self._record_migration(target.mid, new.mid, s)
+        return new
+
+    # ---------------- contraction -------------------------------------- #
+    def remove_instance(self) -> Optional[Instance]:
+        """Mitosis contraction: shrink the smallest macro down to N_l, then
+        shrink a full one; merge the two smallest when they jointly hold
+        N_u (Fig. 7 steps 5-8)."""
+        if not self.macros:
+            return None
+        smallest = min(self.macros, key=lambda m: m.size)
+        if smallest.size > self.n_lower or len(self.macros) == 1:
+            victim = smallest
+        else:
+            victim = max(self.macros, key=lambda m: m.size)
+        inst = victim.remove_instance()
+        if victim.size == 0:
+            self.macros.remove(victim)
+        self._maybe_merge()
+        return inst
+
+    def _maybe_merge(self) -> None:
+        if len(self.macros) < 2:
+            return
+        by_size = sorted(self.macros, key=lambda m: m.size)
+        a, b = by_size[0], by_size[1]
+        if a.size + b.size <= self.n_upper:
+            # merge a into b via handler migration
+            while a.size:
+                inst = a.remove_instance()
+                if inst is None:
+                    break
+                self._record_migration(a.mid, b.mid, inst)
+                b.add_instance(inst)
+            self.macros.remove(a)
+
+    # ---------------- handler migration -------------------------------- #
+    def _record_migration(self, src: int, dst: int, inst: Instance) -> None:
+        t0 = time.perf_counter()
+        handler = InstanceHandler.for_instance(inst)
+        blob = handler.serialize()                 # leaves src scheduler
+        restored = InstanceHandler.deserialize(blob)   # arrives at dst
+        resolved = restored.resolve()
+        assert resolved is inst                    # logical migration only
+        dt = time.perf_counter() - t0
+        self.migrations.append(
+            MigrationRecord(src_macro=src, dst_macro=dst,
+                            actor_id=inst.iid, seconds=dt))
+
+    # ---------------- views -------------------------------------------- #
+    @property
+    def total_instances(self) -> int:
+        return sum(m.size for m in self.macros)
+
+    def sizes(self) -> List[int]:
+        return sorted(m.size for m in self.macros)

@@ -1,0 +1,52 @@
+"""Service-level objectives and attainment metrics (paper Table 4)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List
+
+from repro.core.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    ttft: float      # seconds
+    tpot: float      # seconds per output token
+
+
+# Table 4: SLOs depend only on the application, not the model size.
+DATASET_SLOS: Dict[str, SLO] = {
+    "alpaca": SLO(ttft=1.0, tpot=0.100),
+    "sharegpt": SLO(ttft=5.0, tpot=0.100),
+    "longbench": SLO(ttft=15.0, tpot=0.100),
+}
+
+
+def request_meets_slo(req: Request, slo: SLO) -> bool:
+    if req.ttft is None or req.ttft > slo.ttft:
+        return False
+    if req.tokens_generated > 1:
+        return req.avg_tpot is not None and req.avg_tpot <= slo.tpot
+    return True
+
+
+def attainment(reqs: Iterable[Request], slo: SLO) -> float:
+    done = [r for r in reqs if r.finish_time is not None]
+    if not done:
+        return 0.0
+    ok = sum(1 for r in done if request_meets_slo(r, slo))
+    return ok / len(done)
+
+
+def percentile_latencies(reqs: List[Request]) -> Dict[str, float]:
+    import numpy as np
+    done = [r for r in reqs if r.finish_time is not None]
+    out: Dict[str, float] = {"n": float(len(done))}
+    if not done:
+        return out
+    ttfts = np.array([r.ttft for r in done])
+    tpots = np.array([r.avg_tpot for r in done if r.avg_tpot is not None])
+    for p in (50, 90, 99):
+        out[f"ttft_p{p}"] = float(np.percentile(ttfts, p))
+        if len(tpots):
+            out[f"tpot_p{p}"] = float(np.percentile(tpots, p))
+    return out

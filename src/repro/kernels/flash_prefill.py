@@ -1,0 +1,169 @@
+"""Flash-attention prefill kernel (TPU Pallas).
+
+TPU-native tiling: the (q-block, kv-block) loop runs on a 4-D grid
+``(batch, kv_head, q_blocks, kv_blocks)`` with the kv dimension innermost
+and sequential ("arbitrary"), carrying the online-softmax state (m, l,
+acc) in VMEM scratch between kv steps.  Block sizes are MXU-aligned
+(multiples of 128 on the contracting/lane dims).  GQA is handled by
+folding the q-heads of one kv head into the q-block rows, so the KV cache
+is never repeated in memory — the HBM->VMEM streams are q once, k/v once
+per q-block.
+
+Supports: causal masking, sliding-window attention, and a q_offset for
+chunked prefill (queries at absolute positions q_offset + i attending to
+a kv prefix).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, window: int, q_offset: int,
+                  block_q: int, block_k: int, kv_len: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0]              # (G*block_q, D) q rows for this kv head
+    k = k_ref[0, 0]              # (block_k, D)
+    v = v_ref[0, 0]              # (block_k, D)
+    d = q.shape[-1]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * (d ** -0.5)  # (G*bq, bk)
+
+    # absolute positions: q rows are G stacked copies of block_q queries
+    rows = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) % block_q
+    q_pos = q_offset + qi * block_q + rows
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = k_pos < kv_len
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=-1)[:, None]
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)[:, None]
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_prefill(
+    q: jnp.ndarray,            # (B, T, Hq, D)
+    k: jnp.ndarray,            # (B, S, Hkv, D)
+    v: jnp.ndarray,            # (B, S, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+
+    block_q = min(block_q, T)
+    block_k = min(block_k, S)
+    nq = -(-T // block_q)
+    nk = -(-S // block_k)
+    Tp, Sp = nq * block_q, nk * block_k
+    if Tp != T:
+        q = jnp.pad(q, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    if Sp != S:
+        k = jnp.pad(k, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+
+    # (B, Hkv, G, T, D): queries grouped under their kv head
+    qg = jnp.moveaxis(q.reshape(B, Tp, Hkv, G, D), (2, 3), (1, 2))
+    kg = jnp.moveaxis(k, 2, 1)       # (B, Hkv, Sp, D)
+    vg = jnp.moveaxis(v, 2, 1)
+    # fold G into q rows: (B, Hkv, G*T, D) with row = g*block... we instead
+    # fold G into the q-block: rows [g*block_q + i] per block
+    qg = qg.reshape(B, Hkv, G * Tp, D)
+
+    grid = (B, Hkv, nq, nk)
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=(
+                "parallel", "parallel", "parallel", "arbitrary"))
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, causal=causal, window=window, q_offset=q_offset,
+            block_q=block_q, block_k=block_k, kv_len=S),
+        grid=grid,
+        in_specs=[
+            # q rows for (b, h, qi): _group_rows lays the G query groups of
+            # each q-block out contiguously, so block qi delivers the
+            # G*block_q rows this kv head attends with
+            pl.BlockSpec((1, 1, G * block_q, D),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, qi, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G * block_q, D),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G * Tp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G * block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((G * block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((G * block_q, D), jnp.float32),   # output accum
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(_group_rows(qg, G, nq, block_q, Tp), kg, vg)
+
+    out = _ungroup_rows(out, G, nq, block_q, Tp)    # (B, Hkv, G, Tp, D)
+    out = jnp.moveaxis(out, (1, 2), (2, 3)).reshape(B, Tp, Hq, D)
+    return out[:, :T]
+
+
+def _group_rows(qg, G, nq, block_q, Tp):
+    """(B,Hkv,G*Tp,D) time-major -> block-major rows so that q-block qi
+    holds rows [g*block_q + i] contiguously."""
+    B, Hkv, _, D = qg.shape
+    x = qg.reshape(B, Hkv, G, nq, block_q, D)
+    x = jnp.swapaxes(x, 2, 3)          # (B, Hkv, nq, G, block_q, D)
+    return x.reshape(B, Hkv, nq * G * block_q, D)
+
+
+def _ungroup_rows(out, G, nq, block_q, Tp):
+    B, Hkv, _, D = out.shape
+    x = out.reshape(B, Hkv, nq, G, block_q, D)
+    x = jnp.swapaxes(x, 2, 3)          # (B, Hkv, G, nq, block_q, D)
+    return x.reshape(B, Hkv, G, Tp, D)

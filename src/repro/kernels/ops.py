@@ -1,0 +1,50 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in ``interpret=True`` mode —
+the kernel body runs step-by-step in Python/XLA so correctness is fully
+testable; on a real TPU backend the same `pl.pallas_call` lowers to
+Mosaic.  ``repro.models`` uses the pure-jnp path by default and these
+kernels are opt-in hot-spot replacements (`use_pallas=True` plumbing in
+the serving engine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_with_state
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k"))
+def flash_prefill_op(q, k, v, *, causal=True, window=0, q_offset=0,
+                     block_q=128, block_k=128):
+    return flash_prefill(q, k, v, causal=causal, window=window,
+                         q_offset=q_offset, block_q=block_q, block_k=block_k,
+                         interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_s",))
+def decode_attention_op(q, k_cache, v_cache, lengths, *, block_s=512):
+    return decode_attention(q, k_cache, v_cache, lengths, block_s=block_s,
+                            interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d"))
+def rglru_scan_op(log_a, b, h0=None, *, block_t=256, block_d=256):
+    return rglru_scan(log_a, b, h0, block_t=block_t, block_d=block_d,
+                      interpret=not _on_tpu())
+
+
+@functools.partial(jax.jit, static_argnames=("block_t",))
+def rwkv6_scan_op(r, k, v, w, u, *, block_t=128):
+    return rwkv6_scan(r, k, v, w, u, block_t=block_t,
+                      interpret=not _on_tpu())

@@ -1,0 +1,77 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth the
+interpret-mode tests assert against)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_prefill_ref(q, k, v, *, causal=True, window=0, q_offset=0):
+    """q: (B,T,Hq,D); k,v: (B,S,Hkv,D).  Naive masked softmax attention."""
+    B, T, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bshd->bhgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    q_pos = q_offset + jnp.arange(T)
+    k_pos = jnp.arange(S)
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    att = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows (can happen with window+offset): zero them
+    att = jnp.where(jnp.any(mask, -1)[None, None, None, :, None], att, 0.0)
+    o = jnp.einsum("bhgqs,bshd->bqhgd", att, v.astype(jnp.float32))
+    return o.reshape(B, T, Hq, D).astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: (B,Hq,D); caches: (B,S,Hkv,D); lengths: (B,) valid entries."""
+    B, Hq, D = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (D ** -0.5)
+    mask = jnp.arange(S)[None] < lengths[:, None]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+    att = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgs,bshd->bhgd", att, v_cache.astype(jnp.float32))
+    return o.reshape(B, Hq, D).astype(q.dtype)
+
+
+def rglru_scan_ref(log_a, b, h0=None):
+    """h_t = exp(log_a_t) h_{t-1} + b_t; inputs (B,T,d) f32, h0 (B,d)."""
+    B, T, d = log_a.shape
+    h = jnp.zeros((B, d), jnp.float32) if h0 is None else h0.astype(
+        jnp.float32)
+    outs = []
+    for t in range(T):   # deliberately naive: the oracle
+        h = jnp.exp(log_a[:, t]) * h + b[:, t]
+        outs.append(h)
+    return jnp.stack(outs, axis=1)
+
+
+def rwkv6_ref(r, k, v, w, u, s0=None):
+    """Naive per-step WKV6 recurrence.  All (B,T,H,D) f32; u (H,D);
+    returns (o, final_state)."""
+    B, T, H, D = r.shape
+    S = (jnp.zeros((B, H, D, D), jnp.float32) if s0 is None
+         else s0.astype(jnp.float32))
+    outs = []
+    for t in range(T):
+        kv = jnp.einsum("bhd,bhe->bhde", k[:, t], v[:, t])
+        o = jnp.einsum("bhd,hd,bhd->bh", r[:, t], u.astype(jnp.float32),
+                       k[:, t])[..., None] * v[:, t]
+        o = o + jnp.einsum("bhd,bhde->bhe", r[:, t], S)
+        S = S * w[:, t][..., None] + kv
+        outs.append(o)
+    return jnp.stack(outs, axis=1), S

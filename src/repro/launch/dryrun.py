@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run entry point.
+
+The two lines above MUST precede any jax-importing code: jax locks the
+device count on first init, and the production meshes (16x16 and 2x16x16)
+need 512 placeholder host devices.  Smoke tests / benches must NOT import
+this module (they want 1 device); they use ``dryrun_lib`` in their own
+subprocess when needed.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k --multi-pod
+    python -m repro.launch.dryrun --all          # full sweep, both meshes
+"""
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    from repro.configs import ASSIGNED
+    from repro.launch.dryrun_lib import run_dryrun, save_result
+    from repro.launch.input_specs import INPUT_SHAPES
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="baseline")
+    args = ap.parse_args()
+
+    if args.all:
+        combos = [(a, s, mp)
+                  for a in ASSIGNED + ["llama3-8b-sw"]
+                  for s in INPUT_SHAPES
+                  for mp in (False, True)]
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        combos = [(args.arch, args.shape, args.multi_pod)]
+
+    rc = 0
+    for arch, shape, mp in combos:
+        res = run_dryrun(arch, shape, multi_pod=mp, variant=args.variant)
+        path = save_result(res, args.out)
+        line = {k: res.get(k) for k in
+                ("arch", "shape", "mesh", "status", "compile_seconds")}
+        if res["status"] == "ok":
+            line["dominant"] = res["roofline"]["dominant"]
+            line["fits_hbm"] = res["memory"]["fits_hbm"]
+            print(json.dumps(line))
+            print(f"  memory_analysis: peak={res['memory']['peak_bytes']/1e9:.2f}GB/device")
+            print(f"  cost_analysis: flops/dev={res['cost']['flops_per_device']:.3e} "
+                  f"bytes/dev={res['cost']['bytes_per_device']:.3e} "
+                  f"wire/dev={res['cost']['wire_bytes_per_device']:.3e}")
+        elif res["status"] == "skipped":
+            line["reason"] = res["reason"]
+            print(json.dumps(line))
+        else:
+            line["error"] = res["error"]
+            print(json.dumps(line), file=sys.stderr)
+            rc = 1
+        print(f"  -> {path}", flush=True)
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,74 @@
+"""Input shapes and ShapeDtypeStruct stand-ins for every (arch x shape).
+
+The four assigned input shapes; ``input_specs`` returns weak-type-correct,
+shardable stand-ins with NO device allocation (ShapeDtypeStruct), exactly
+what ``jax.jit(...).lower()`` needs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+INPUT_SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(cfg: ModelConfig, shape: InputShape) -> Optional[str]:
+    """None if the pair runs; otherwise the documented skip reason."""
+    if shape.kind == "decode":
+        if cfg.is_encoder:
+            return "encoder-only architecture has no decode step"
+        if shape.seq_len > 100_000 and not cfg.subquadratic:
+            return ("pure full-attention arch: 524k dense KV cache is "
+                    "quadratic; skipped per DESIGN.md (use *-sw variant)")
+    return None
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape,
+                act_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Model-input specs (tokens/frames/patches [+ labels for train])."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.modality == "audio":
+        out["frames"] = SDS((B, S, cfg.frontend_dim), act_dtype)
+        if shape.kind == "train":
+            out["labels"] = SDS((B, S), jnp.int32)
+        return out
+    if cfg.modality == "vision" and shape.kind != "decode":
+        P = cfg.num_patches
+        out["tokens"] = SDS((B, S - P), jnp.int32)
+        out["patches"] = SDS((B, P, cfg.frontend_dim), act_dtype)
+        if shape.kind == "train":
+            out["labels"] = SDS((B, S - P), jnp.int32)
+        return out
+    if shape.kind == "decode":
+        out["tokens"] = SDS((B, 1), jnp.int32)
+    else:
+        out["tokens"] = SDS((B, S), jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = SDS((B, S), jnp.int32)
+    return out
+
+
+def to_sds(tree: Any) -> Any:
+    return jax.tree.map(lambda x: SDS(x.shape, x.dtype), tree)

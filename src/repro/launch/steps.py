@@ -1,0 +1,113 @@
+"""Builders for the distributed step functions (train / prefill / decode).
+
+Each builder returns ``(step_fn, arg_sds, in_shardings, out_shardings)``
+ready for ``jax.jit(step_fn, in_shardings=..., out_shardings=...)
+.lower(*arg_sds).compile()`` — the multi-pod dry-run path — or for real
+execution with materialized arrays of the same structure.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.input_specs import InputShape, batch_specs
+from repro.models import forward, init_cache, init_params, make_loss_fn
+from repro.models import shardings as sh
+from repro.models.layers import MeshInfo
+from repro.training.optimizer import AdamW, AdamWState
+
+
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_params, cfg=cfg, dtype=dtype),
+        jax.random.key(0))
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# --------------------------------------------------------------------------- #
+def build_train_step(cfg: ModelConfig, mi: MeshInfo, shape: InputShape,
+                     dtype=jnp.bfloat16, optimizer: AdamW = AdamW()):
+    mesh = mi.mesh
+    loss_fn = make_loss_fn(cfg, mi)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, loss
+
+    p_sds = abstract_params(cfg, dtype)
+    o_sds = jax.eval_shape(optimizer.init, p_sds)
+    b_sds = batch_specs(cfg, shape, act_dtype=dtype)
+
+    shard_batch = bool(mi.batch_axes)
+    p_spec = sh.param_pspecs(cfg, p_sds, mi)
+    o_spec = AdamWState(
+        step=P(),
+        m=sh.opt_state_pspecs(cfg, p_sds, mi),
+        v=sh.opt_state_pspecs(cfg, p_sds, mi))
+    b_spec = sh.batch_pspecs(cfg, b_sds, mi, shard_batch)
+
+    in_sh = (_named(mesh, p_spec), _named(mesh, o_spec), _named(mesh, b_spec))
+    out_sh = (in_sh[0], in_sh[1], NamedSharding(mesh, P()))
+    return train_step, (p_sds, o_sds, b_sds), in_sh, out_sh
+
+
+# --------------------------------------------------------------------------- #
+def build_prefill_step(cfg: ModelConfig, mi: MeshInfo, shape: InputShape,
+                       dtype=jnp.bfloat16):
+    mesh = mi.mesh
+
+    def prefill_step(params, batch):
+        logits, cache = forward(params, cfg, batch, mi=mi, return_cache=True)
+        return logits[:, -1], cache
+
+    p_sds = abstract_params(cfg, dtype)
+    b_sds = batch_specs(cfg, shape, act_dtype=dtype)
+    shard_batch = bool(mi.batch_axes)
+    p_spec = sh.param_pspecs(cfg, p_sds, mi)
+    b_spec = sh.batch_pspecs(cfg, b_sds, mi, shard_batch)
+    in_sh = (_named(mesh, p_spec), _named(mesh, b_spec))
+    # let GSPMD place the returned cache/logits (inferred from producers)
+    return prefill_step, (p_sds, b_sds), in_sh, None
+
+
+# --------------------------------------------------------------------------- #
+def build_decode_step(cfg: ModelConfig, mi: MeshInfo, shape: InputShape,
+                      dtype=jnp.bfloat16):
+    mesh = mi.mesh
+    B, S = shape.global_batch, shape.seq_len
+
+    def decode_step(params, cache, tokens, cache_len):
+        logits, new_cache = forward(
+            params, cfg, {"tokens": tokens}, mi=mi, cache=cache,
+            cache_len=cache_len)
+        return logits[:, 0], new_cache
+
+    p_sds = abstract_params(cfg, dtype)
+    c_sds = jax.eval_shape(
+        functools.partial(init_cache, cfg, B, max_len=S, dtype=dtype))
+    t_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    l_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+
+    shard_batch = bool(mi.batch_axes)
+    p_spec = sh.param_pspecs(cfg, p_sds, mi)
+    c_spec = sh.cache_pspecs(cfg, c_sds, mi, shard_batch)
+    bspec = mi.batch_axes if shard_batch else None
+    in_sh = (
+        _named(mesh, p_spec),
+        _named(mesh, c_spec),
+        NamedSharding(mesh, P(bspec, None)),
+        NamedSharding(mesh, P(bspec)),
+    )
+    out_sh = (NamedSharding(mesh, P(bspec, None)), in_sh[1])
+    return decode_step, (p_sds, c_sds, t_sds, l_sds), in_sh, out_sh

@@ -1,0 +1,55 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a reduced (smoke) or full config; full configs on the production mesh
+are exercised through dryrun.py (this container has one real device).
+"""
+import argparse
+import dataclasses
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--d-model", type=int, default=0,
+                    help="override d_model (e.g. ~100M-param runs)")
+    ap.add_argument("--layers", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--checkpoint", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_config, get_smoke_config
+    from repro.data.pipeline import ByteTokenizer, TokenDataset, \
+        synthetic_corpus
+    from repro.training.optimizer import AdamW
+    from repro.training.train_loop import train
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    updates = {}
+    if args.d_model:
+        heads = max(1, args.d_model // 64) if cfg.num_heads else 0
+        updates.update(d_model=args.d_model, num_heads=heads,
+                       num_kv_heads=max(1, heads // 2) if heads else 0,
+                       head_dim=64 if heads else 0, d_ff=args.d_model * 4)
+    if args.layers:
+        updates.update(num_layers=args.layers)
+    if updates:
+        cfg = dataclasses.replace(cfg, **updates)
+
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{args.steps} steps @ batch={args.batch} seq={args.seq}")
+    ds = TokenDataset.from_texts(synthetic_corpus(512),
+                                 ByteTokenizer(cfg.vocab_size))
+    batches = ds.batches(args.batch, args.seq)
+    _, losses = train(cfg, batches, steps=args.steps,
+                      optimizer=AdamW(lr=args.lr),
+                      checkpoint_path=args.checkpoint)
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'improved' if losses[-1] < losses[0] else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

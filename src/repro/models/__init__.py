@@ -1,0 +1,8 @@
+from repro.models.model import (  # noqa: F401
+    MeshInfo,
+    init_params,
+    forward,
+    init_cache,
+    grow_cache,
+    make_loss_fn,
+)

@@ -1,0 +1,194 @@
+"""Partition-spec rules for params / optimizer state / caches / batches.
+
+Megatron-style tensor parallelism over the ``model`` axis; batch over the
+(``pod``,) ``data`` axes.  GSPMD pads non-divisible dims (e.g. 40 heads on a
+16-way axis, GQA kv=8 on 16), which the roofline notes call out.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import MeshInfo
+
+# leaf name -> spec builder(model_axis M) ------------------------------------
+def _param_spec(path: Tuple[str, ...], leaf, M: str) -> P:
+    name = path[-1]
+    ndim = leaf.ndim - (1 if any(p == "layers_scan" for p in path) else 0)
+    up = {"wq", "wk", "wv", "w_gate", "w_up", "w_x", "w_in_gate",
+          "w_rec_gate", "w_r", "w_k", "w_v", "w_g", "w_in",
+          "decay_lora_b"}
+    down = {"wo", "w_down", "w_out", "w_o"}
+    if name == "embed":
+        return P(M, None)
+    if name == "lm_head":
+        return P(None, M)
+    if name == "frontend":
+        return P(None, None)
+    if name == "router":
+        return P()
+    if name in up:
+        if ndim == 3:                # moe expert weights (E, d, f)
+            return P(M, None, None)
+        return P(None, M)
+    if name in down:
+        if ndim == 3:                # (E, f, d)
+            return P(M, None, None)
+        return P(M, None)
+    if name in ("bq", "bk", "bv", "lambda", "decay_base"):
+        return P(M)
+    if name == "conv_w":
+        return P(None, M)
+    if name == "bonus_u":
+        return P(M, None)
+    # norms, mu, lora_a, scales: replicated
+    return P()
+
+
+def _pad_scan_dim(path: Tuple[str, ...], spec: P) -> P:
+    """Stacked scan params have a leading layer dim -> prepend None."""
+    if any(p == "layers_scan" for p in path):
+        return P(None, *spec)
+    return spec
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            names.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            names.append(str(p.idx))
+        else:
+            names.append(str(p))
+    return tuple(names)
+
+
+def fit_spec(spec: P, shape, mi: MeshInfo) -> P:
+    """Drop (replicate) axes whose mesh size does not divide the dim —
+    explicit jit in_shardings require divisibility.  The replication cost
+    (e.g. GQA kv=8 on a 16-way model axis) is visible in the roofline and
+    attacked in the perf iterations."""
+    if mi.mesh is None:
+        return P()
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, parts):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        n = 1
+        for a in axes:
+            n *= mi.mesh.shape[a]
+        out.append(ax if dim % n == 0 else None)
+    return P(*out)
+
+
+def param_pspecs(cfg: ModelConfig, params: Any, mi: MeshInfo) -> Any:
+    M = mi.model_axis
+    # FSDP sharding uses the mesh's non-model axes even when the batch
+    # itself is too small to shard (e.g. batch=1 long-context decode)
+    data_axes = mi.batch_axes
+    if mi.fsdp_params and not data_axes and mi.mesh is not None:
+        data_axes = tuple(a for a in mi.mesh.axis_names if a != M)
+
+    def fn(path, leaf):
+        names = _path_names(path)
+        spec = _param_spec(names, leaf, M)
+        spec = fit_spec(_pad_scan_dim(names, spec), leaf.shape, mi)
+        if mi.fsdp_params and data_axes and leaf.size >= 1 << 20:
+            # FSDP-style: shard the first still-replicated big dim over the
+            # batch axes (XLA all-gathers the shard before use)
+            parts = list(spec) + [None] * (leaf.ndim - len(spec))
+            n = _size(mi, data_axes)
+            for i, (dim, s) in enumerate(zip(leaf.shape, parts)):
+                if s is None and dim % n == 0 and dim >= n:
+                    parts[i] = data_axes
+                    break
+            spec = P(*parts)
+        return spec
+
+    return jax.tree_util.tree_map_with_path(fn, params)
+
+
+def opt_state_pspecs(cfg: ModelConfig, params: Any, mi: MeshInfo,
+                     zero1: bool = True) -> Any:
+    """Adam m/v: param sharding + ZeRO-1-style extra sharding of the first
+    still-replicated dim over the data axis (needed for 32B+ models)."""
+    base = param_pspecs(cfg, params, mi)
+    if not zero1 or not mi.batch_axes:
+        return base
+    data_axes = mi.batch_axes
+
+    def widen(path, leaf, spec):
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (dim, s) in enumerate(zip(leaf.shape, parts)):
+            if s is None and dim % _size(mi, data_axes) == 0 and dim >= 1024:
+                parts[i] = data_axes
+                break
+        return P(*parts)
+
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: widen(p, l, base_at(base, p)), params)
+
+
+def base_at(tree, path):
+    node = tree
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            node = node[p.key]
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            node = node[p.idx]
+    return node
+
+
+def _size(mi: MeshInfo, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mi.mesh.shape[a]
+    return n
+
+
+def cache_pspecs(cfg: ModelConfig, cache: Any, mi: MeshInfo,
+                 shard_batch: bool) -> Any:
+    """KV / state caches: batch over data axes, heads over model axis."""
+    B = mi.batch_axes if shard_batch else None
+    M = mi.model_axis
+
+    def fn(path, leaf):
+        names = _path_names(path)
+        scan = "scan" in names
+        name = names[-1]
+        if name in ("k", "v"):                    # (B, S, kv, hd)
+            spec = (P(B, None, None, M) if mi.kv_shard == "head_dim"
+                    else P(B, None, M, None))
+        elif name == "state":                     # (B, H, hd, hd)
+            spec = P(B, M, None, None)
+        elif name in ("conv", "h", "shift"):      # (B, ..., d) channel-wise
+            spec = (P(B, None, M) if leaf.ndim - (1 if scan else 0) == 3
+                    else P(B, M))
+        else:  # pragma: no cover
+            spec = P()
+        spec = P(None, *spec) if scan else spec
+        return fit_spec(spec, leaf.shape, mi)
+
+    return jax.tree_util.tree_map_with_path(fn, cache)
+
+
+def batch_pspecs(cfg: ModelConfig, batch: Dict[str, Any], mi: MeshInfo,
+                 shard_batch: bool) -> Dict[str, Any]:
+    B = mi.batch_axes if shard_batch else None
+    out = {}
+    for k, v in batch.items():
+        out[k] = fit_spec(P(B, *([None] * (v.ndim - 1))), v.shape, mi)
+    return out
+
+
+def to_named(tree_specs, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,6 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HardwareSpec,
+    TPU_V5E,
+    collect_collectives,
+    roofline_terms,
+)

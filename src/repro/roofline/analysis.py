@@ -1,0 +1,164 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs  / (chips x peak_FLOP/s)
+    memory  term    = HLO_bytes  / (chips x HBM_bw)
+    collective term = wire_bytes / (chips x link_bw)
+
+``cost_analysis()`` provides HLO_FLOPs / HLO_bytes.  Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD HLO text, sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, multiply ops inside ``while`` bodies by the loop trip
+count (layer scan), and convert to on-wire bytes with the standard ring
+factors (all-reduce moves ~2x its operand; AG/RS/A2A ~1x).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# on-wire factor per collective kind (ring algorithms, large-N limit)
+_WIRE_FACTOR = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    link_bw: float             # bytes/s per ICI link
+    hbm_bytes: float
+
+TPU_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    link_bw=50e9,
+    hbm_bytes=16e9,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """'bf16[8,128,2560]' -> byte count (tuple shapes handled upstream)."""
+    m = re.match(r"([a-z0-9]+)\[([0-9,]*)\]", shape_str)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def _split_computations(hlo: str) -> Dict[str, str]:
+    """Map computation name -> body text (entry included)."""
+    comps: Dict[str, str] = {}
+    cur_name, cur_lines = None, []
+    for line in hlo.splitlines():
+        m = _HEADER_RE.match(line)
+        if m:
+            if cur_name:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name, cur_lines = m.group(1), []
+        elif line.startswith("}"):
+            if cur_name:
+                comps[cur_name] = "\n".join(cur_lines)
+            cur_name, cur_lines = None, []
+        elif cur_name is not None:
+            cur_lines.append(line)
+    if cur_name:
+        comps[cur_name] = "\n".join(cur_lines)
+    return comps
+
+
+def _while_trip_counts(hlo: str, comps: Dict[str, str]) -> Dict[str, int]:
+    """body-computation name -> trip count.
+
+    XLA records ``backend_config={"known_trip_count":{"n":"36"}}`` on while
+    ops after loop analysis; fall back to the condition's comparison
+    constant, then 1."""
+    trips: Dict[str, int] = {}
+    for m in re.finditer(
+            r"while\(%?[\w\.\-]+\), condition=%?([\w\.\-]+), "
+            r"body=%?([\w\.\-]+)([^\n]*)", hlo):
+        cond, body, rest = m.groups()
+        count = None
+        kt = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', rest)
+        if kt:
+            count = int(kt.group(1))
+        else:
+            consts = re.findall(r"constant\((\d+)\)", comps.get(cond, ""))
+            if consts:
+                count = max(int(c) for c in consts)
+        trips[body] = count or 1
+    return trips
+
+
+def collect_collectives(hlo: str) -> Tuple[float, List[dict]]:
+    """Returns (total on-wire bytes per device, per-op detail list)."""
+    comps = _split_computations(hlo)
+    trips = _while_trip_counts(hlo, comps)
+
+    ops: List[dict] = []
+    total = 0.0
+    for comp_name, body in comps.items():
+        mult = trips.get(comp_name, 1)
+        for line in body.splitlines():
+            m = re.search(
+                r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+                r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                r"collective-permute)(?:-start)?\(", line)
+            if not m:
+                continue
+            shape_part, kind = m.groups()
+            if shape_part.startswith("("):       # tuple shape
+                shapes = re.findall(r"[a-z0-9]+\[[0-9,]*\]", shape_part)
+            else:
+                shapes = [shape_part]
+            nbytes = sum(_shape_bytes(s) for s in shapes)
+            wire = nbytes * _WIRE_FACTOR[kind] * mult
+            total += wire
+            ops.append({"kind": kind, "bytes": nbytes, "trips": mult,
+                        "wire_bytes": wire, "computation": comp_name})
+    return total, ops
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    wire_bytes_per_device: float,
+    hw: HardwareSpec = TPU_V5E,
+) -> Dict[str, float]:
+    """All inputs are PER-DEVICE quantities of the SPMD program (which is
+    what cost_analysis / the partitioned HLO report), so the per-chip
+    denominators apply directly."""
+    compute_s = flops_per_device / hw.peak_flops
+    memory_s = bytes_per_device / hw.hbm_bw
+    collective_s = wire_bytes_per_device / hw.link_bw
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1])[0]
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+    }

@@ -1,0 +1,226 @@
+"""Instruction-level cost model over post-SPMD HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+model whose layers run under ``lax.scan`` is undercounted by ~num_layers x.
+This module re-derives per-device FLOPs / HBM bytes / collective wire bytes
+by walking the HLO with a call-graph multiplier (entry=1, while bodies x
+known_trip_count, fusions inherit the caller's multiplier).
+
+  * FLOPs: every ``dot`` op: 2 * prod(output dims) * prod(lhs contracting
+    dims) (+ convolutions if present, treated the same way).
+  * HBM bytes: at the top level of entry/while bodies, each instruction
+    reads its operands and writes its output once (fusion internals stay
+    on-chip) — operand/output byte sizes resolved from a symbol table.
+  * Collective wire bytes: ring factors (all-reduce 2x, others 1x).
+
+CPU-backend caveat (documented in EXPERIMENTS.md): the CPU compiler
+promotes bf16 dot inputs to f32, so some weight tensors appear at 2x the
+bytes the TPU target would move.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Tuple
+
+from repro.roofline.analysis import (_DTYPE_BYTES, _HEADER_RE, _WIRE_FACTOR,
+                                     _shape_bytes, _split_computations,
+                                     _while_trip_counts)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+                     r"(\(?[a-z0-9]+\[[^=]*?)\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*([a-z0-9]+\[[0-9,]*\])")
+
+_SKIP_MEM_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "iota", "broadcast", "reshape", "copy-start", "copy-done",
+}
+
+
+def _shape_dims(shape_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.match(shape_str)
+    if not m:
+        return "f32", []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+def _headers(hlo: str) -> Dict[str, str]:
+    """computation name -> header line (for param shapes)."""
+    out = {}
+    for line in hlo.splitlines():
+        m = _HEADER_RE.match(line)
+        if m:
+            out[m.group(1)] = line
+    return out
+
+
+def _symbols(header: str, body: str) -> Dict[str, str]:
+    syms: Dict[str, str] = {}
+    if header:
+        for m in _PARAM_RE.finditer(header.split("->")[0]):
+            syms[m.group(1)] = m.group(2)
+    for line in body.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            name, shape = m.group(1), m.group(2)
+            syms[name] = shape.split("{")[0].strip()
+    return syms
+
+
+def _call_multipliers(hlo: str, comps: Dict[str, str]) -> Dict[str, float]:
+    """computation -> how many times it runs per step execution."""
+    trips = _while_trip_counts(hlo, comps)
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w\.\-]+)", line)
+        if m:
+            entry = m.group(1)
+            break
+    mult: Dict[str, float] = {}
+    if entry is None:
+        return {name: 1.0 for name in comps}
+
+    def visit(name: str, m: float):
+        if m <= mult.get(name, 0.0):
+            return
+        mult[name] = m
+        body = comps.get(name, "")
+        for cm in re.finditer(
+                r"(?:calls|to_apply|body|condition)=%?([\w\.\-]+)", body):
+            callee = cm.group(1)
+            factor = trips.get(callee, 1) if callee in trips else 1
+            # `body=` computations run trip-count times
+            visit(callee, m * (factor if callee in trips else 1))
+
+    visit(entry, 1.0)
+    # computations never reached (dead) default to 0 -> skip them
+    return mult
+
+
+def _dot_flops(line: str, syms: Dict[str, str]) -> float:
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    out_shape = m.group(2).split("{")[0].strip()
+    _, out_dims = _shape_dims(out_shape)
+    # lhs operand: first token inside dot(...)
+    dm = re.search(r"dot\(([^)]*)\)", line)
+    if not dm:
+        return 0.0
+    first = dm.group(1).split(",")[0].strip()
+    sm = _SHAPE_RE.match(first)
+    if sm:
+        lhs_shape = first.split("{")[0].split(" ")[0]
+    else:
+        name = first.lstrip("%")
+        lhs_shape = syms.get(name, "")
+    _, lhs_dims = _shape_dims(lhs_shape)
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+    contract = 1
+    if cm and cm.group(1) and lhs_dims:
+        for d in cm.group(1).split(","):
+            di = int(d)
+            if di < len(lhs_dims):
+                contract *= lhs_dims[di]
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    return 2.0 * n_out * contract
+
+
+def _line_bytes(line: str, op: str, syms: Dict[str, str]) -> float:
+    """HBM traffic estimate for a top-level instruction.
+
+    Sliced accesses move only the slice, not the buffer:
+      * dynamic-update-slice / scatter (incl. fusions named after them):
+        2 x the small operands (read update + write update; the big buffer
+        is aliased in place).
+      * dynamic-slice / gather: 2 x output (read slice, write result).
+    Everything else: output + all operands.
+    """
+    m = _DEF_RE.match(line)
+    if not m:
+        return 0.0
+    name, out_shape_part = m.group(1), m.group(2)
+    out_bytes = 0.0
+    for s in _SHAPE_RE.finditer(out_shape_part):
+        out_bytes += _shape_bytes(s.group(0))
+
+    operands: List[float] = []
+    pm = re.search(rf"{op}\(([^)]*)\)", line)
+    if pm:
+        for tok in pm.group(1).split(","):
+            tok = tok.strip()
+            if _SHAPE_RE.match(tok):
+                operands.append(_shape_bytes(tok.split(" ")[0]))
+            elif tok.startswith("%"):
+                shape = syms.get(tok.lstrip("%"), "")
+                if shape.startswith("("):
+                    continue  # tuples: elements counted at their own defs
+                operands.append(_shape_bytes(shape))
+
+    tag = f"{name} {op}"
+    if "dynamic-update-slice" in tag or "scatter" in tag:
+        return 2.0 * sum(b for b in operands if b < out_bytes)
+    if "dynamic-slice" in tag or "gather" in tag:
+        return 2.0 * out_bytes
+    return out_bytes + sum(operands)
+
+
+@dataclasses.dataclass
+class HloCosts:
+    flops: float
+    hbm_bytes: float
+    wire_bytes: float
+    collectives: Dict[str, Dict[str, float]]
+    trip_counted_computations: int
+
+
+def analyze_hlo(hlo: str) -> HloCosts:
+    comps = _split_computations(hlo)
+    headers = _headers(hlo)
+    mult = _call_multipliers(hlo, comps)
+    trips = _while_trip_counts(hlo, comps)
+
+    flops = 0.0
+    hbm = 0.0
+    wire = 0.0
+    coll: Dict[str, Dict[str, float]] = {}
+
+    # which computations are "top level" memory-wise: entry + while bodies
+    mem_comps = set(trips)
+    for line in hlo.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w\.\-]+)", line)
+        if m:
+            mem_comps.add(m.group(1))
+
+    for name, body in comps.items():
+        k = mult.get(name, 0.0)
+        if k <= 0:
+            continue
+        syms = _symbols(headers.get(name, ""), body)
+        count_mem = name in mem_comps
+        for line in body.splitlines():
+            dm = _DEF_RE.match(line)
+            if not dm:
+                continue
+            op = dm.group(3)
+            if op == "dot" or op.startswith("convolution"):
+                flops += k * _dot_flops(line, syms)
+            kind = op[:-6] if op.endswith("-start") else op
+            if kind in _WIRE_FACTOR:
+                nbytes = 0.0
+                for s in _SHAPE_RE.finditer(dm.group(2)):
+                    nbytes += _shape_bytes(s.group(0))
+                w = nbytes * _WIRE_FACTOR[kind] * k
+                wire += w
+                c = coll.setdefault(kind, {"count": 0, "wire_bytes": 0.0})
+                c["count"] += k
+                c["wire_bytes"] += w
+            if count_mem and op not in _SKIP_MEM_OPS:
+                hbm += k * _line_bytes(line, op, syms)
+    return HloCosts(flops=flops, hbm_bytes=hbm, wire_bytes=wire,
+                    collectives=coll,
+                    trip_counted_computations=len(trips))

@@ -1,0 +1,167 @@
+"""Real-execution serving engine: continuous batching over an actual JAX
+model (runs a reduced config on CPU; the same code drives TPU instances).
+
+One ``ServingEngine`` is one PaDG *instance*: it owns params, a slotted
+KV cache, and executes prefill/decode slots for the scheduling ``Instance``
+it is attached to.  The scheduler stack (macro instance, Algorithms 1+2,
+mitosis) is exactly the one from ``repro.core`` — durations are measured
+wall-clock instead of predicted, which is what `MeasuredExecutor` adapts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.instance import Instance
+from repro.core.request import Request, RequestState
+from repro.models import forward, grow_cache, init_cache, init_params
+from repro.models.layers import MeshInfo
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8            # decode slots
+    max_seq_len: int = 256        # per-slot KV capacity
+    dtype: object = jnp.float32
+    eos_token: int = 1
+    greedy: bool = True
+
+
+class MeasuredExecutor:
+    """ExecutorModel backed by observed wall-clock times (EWMA), used by
+    the scheduling Instance attached to a real engine."""
+
+    def __init__(self, fallback_prefill=2e-4, fallback_decode=5e-2):
+        self._prefill_per_tok = fallback_prefill
+        self._decode = fallback_decode
+
+    def observe_prefill(self, tokens: int, dt: float) -> None:
+        per = dt / max(1, tokens)
+        self._prefill_per_tok = 0.7 * self._prefill_per_tok + 0.3 * per
+
+    def observe_decode(self, dt: float) -> None:
+        self._decode = 0.7 * self._decode + 0.3 * dt
+
+    def prefill_time(self, lens: List[int]) -> float:
+        return self._prefill_per_tok * sum(lens)
+
+    def decode_time(self, batch: int, ctxs: List[int]) -> float:
+        return self._decode
+
+
+class ServingEngine:
+    """Slot-based continuous batching with a fixed-shape decode step (no
+    recompilation as requests come and go)."""
+
+    def __init__(self, cfg: ModelConfig, params=None, seed: int = 0,
+                 econf: EngineConfig = EngineConfig()):
+        assert not cfg.is_encoder, "decode engine serves decoder models"
+        self.cfg = cfg
+        self.econf = econf
+        self.params = params if params is not None else init_params(
+            jax.random.key(seed), cfg, econf.dtype)
+        B, S = econf.max_batch, econf.max_seq_len
+        self.cache = init_cache(cfg, B, max_len=S, dtype=econf.dtype)
+        self.tokens = jnp.zeros((B, 1), jnp.int32)
+        self.lengths = np.zeros(B, np.int32)          # context per slot
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.executor = MeasuredExecutor()
+
+        self._prefill_fn = jax.jit(self._prefill_impl)
+        self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(1,))
+
+    # --------------------------------------------------------------- #
+    def _prefill_impl(self, params, toks):
+        logits, cache = forward(params, self.cfg, {"tokens": toks},
+                                return_cache=True)
+        return logits[:, -1], cache
+
+    def _decode_impl(self, params, cache, toks, lengths):
+        logits, cache = forward(params, self.cfg, {"tokens": toks},
+                                cache=cache, cache_len=lengths)
+        return logits[:, 0], cache
+
+    # --------------------------------------------------------------- #
+    def free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def prefill(self, req: Request) -> int:
+        """Run the prompt through the model, land the request in a decode
+        slot.  Returns the generated first token."""
+        slots = self.free_slots()
+        assert slots, "no free decode slot"
+        slot = slots[0]
+        prompt = req.prompt_tokens
+        t0 = time.perf_counter()
+        toks = jnp.asarray(np.array(prompt, np.int32))[None, :]
+        logits, pcache = self._prefill_fn(self.params, toks)
+        first = int(jnp.argmax(logits[0]))
+        pcache = grow_cache(self.cfg, pcache, self.econf.max_seq_len)
+        self.cache = _merge_slot(self.cfg, self.cache, pcache, slot)
+        dt = time.perf_counter() - t0
+        self.executor.observe_prefill(len(prompt), dt)
+
+        self.lengths[slot] = len(prompt)
+        self.slot_req[slot] = req
+        self.tokens = self.tokens.at[slot, 0].set(first)
+        req.generated = [first]
+        return first
+
+    def decode_step(self) -> Dict[int, int]:
+        """One decode iteration over all occupied slots.  Returns
+        {slot: token} for slots that produced a token."""
+        occupied = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not occupied:
+            return {}
+        t0 = time.perf_counter()
+        lengths = jnp.asarray(self.lengths)
+        logits, self.cache = self._decode_fn(
+            self.params, self.cache, self.tokens, lengths)
+        new_tokens = np.asarray(jnp.argmax(logits, axis=-1))
+        dt = time.perf_counter() - t0
+        self.executor.observe_decode(dt)
+
+        out: Dict[int, int] = {}
+        for i in occupied:
+            tok = int(new_tokens[i])
+            self.lengths[i] += 1
+            out[i] = tok
+            req = self.slot_req[i]
+            req.generated.append(tok)
+            self.tokens = self.tokens.at[i, 0].set(tok)
+            done = (tok == self.econf.eos_token
+                    or len(req.generated) >= req.output_len
+                    or self.lengths[i] >= self.econf.max_seq_len - 1)
+            if done:
+                self.slot_req[i] = None
+                self.lengths[i] = 0
+        return out
+
+
+def _merge_slot(cfg, big_cache, pcache, slot: int):
+    """Write a prefill-produced (B=1) cache into batch slot `slot`."""
+    def merge(big, small):
+        # identify the batch axis: scan leaves are (n_full, B, ...) and the
+        # single-request cache has B == 1 there; tail leaves are (B, ...)
+        axis = 1 if (big.ndim >= 2 and small.ndim == big.ndim
+                     and small.shape[0] == big.shape[0]
+                     and small.shape[1] == 1) else 0
+        # pad small's seq dim up to big's if needed
+        pads = []
+        for d in range(big.ndim):
+            if d == axis:
+                pads.append((0, 0))
+            else:
+                pads.append((0, big.shape[d] - small.shape[d]))
+        small = jnp.pad(small, pads)
+        idx = [slice(None)] * big.ndim
+        idx[axis] = slice(slot, slot + 1)
+        return big.at[tuple(idx)].set(small)
+
+    return jax.tree.map(merge, big_cache, pcache)

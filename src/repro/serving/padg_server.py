@@ -1,0 +1,154 @@
+"""PaDG server: real-execution EcoServe over N ServingEngine instances.
+
+Single-process cooperative loop (wall-clock): arrivals are admitted via
+the macro-instance scheduler (Algorithm 1 + constraint check), instances
+run temporal-disaggregated slots — a prefill burst when the scheduler
+routed work to them, decode iterations otherwise.  This is the same
+scheduling stack as the simulator, driven by measured durations.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.configs.base import ModelConfig
+from repro.core.instance import Instance
+from repro.core.macro import MacroInstance
+from repro.core.mitosis import register_instance
+from repro.core.request import Request, RequestState
+from repro.core.slo import SLO
+from repro.serving.engine import EngineConfig, ServingEngine
+
+
+@dataclasses.dataclass
+class ServeStats:
+    finished: List[Request]
+
+    def summary(self) -> Dict[str, float]:
+        import numpy as np
+        done = self.finished
+        if not done:
+            return {"finished": 0}
+        ttft = np.array([r.ttft for r in done])
+        tpots = [r.avg_tpot for r in done if r.avg_tpot is not None]
+        return {
+            "finished": len(done),
+            "ttft_p50": float(np.percentile(ttft, 50)),
+            "ttft_p90": float(np.percentile(ttft, 90)),
+            "tpot_p50": float(np.percentile(tpots, 50)) if tpots else 0.0,
+            "tokens": int(sum(r.tokens_generated for r in done)),
+        }
+
+
+class RealInstance(Instance):
+    """Scheduling instance bound to a real engine."""
+
+    def __init__(self, iid: int, engine: ServingEngine, slo: SLO):
+        super().__init__(
+            iid, engine.executor,
+            kv_capacity_tokens=engine.econf.max_batch
+            * engine.econf.max_seq_len,
+            max_decode_batch=engine.econf.max_batch,
+            slo_tpot=slo.tpot, slo_ttft=slo.ttft)
+        self.engine = engine
+
+
+class PaDGServer:
+    def __init__(self, cfg: ModelConfig, n_instances: int, slo: SLO,
+                 econf: EngineConfig = EngineConfig(), seed: int = 0):
+        self.slo = slo
+        self.instances: List[RealInstance] = []
+        for i in range(n_instances):
+            eng = ServingEngine(cfg, seed=seed, econf=econf)
+            inst = RealInstance(i, eng, slo)
+            register_instance(inst)
+            self.instances.append(inst)
+        self.macro = MacroInstance(
+            0, self.instances, slo,
+            predict_prefill=lambda n: self.instances[0].executor
+            .prefill_time([n]))
+        self.finished: List[Request] = []
+
+    # --------------------------------------------------------------- #
+    def serve(self, requests: List[Request],
+              time_scale: float = 1.0) -> ServeStats:
+        """Serve a request trace (arrival_time in seconds, scaled by
+        ``time_scale``).  Returns per-request latency stats."""
+        self._t0 = time.perf_counter()
+        self._scale = time_scale
+        pending = sorted(requests, key=lambda r: r.arrival_time)
+        queue: List[Request] = []
+
+        def now() -> float:
+            return (time.perf_counter() - self._t0) / time_scale
+
+        while pending or queue or any(
+                i.pending or i.decoding for i in self.instances):
+            t = now()
+            # 1. admit due arrivals through Algorithm 1
+            while pending and pending[0].arrival_time <= t:
+                queue.append(pending.pop(0))
+            still = []
+            for req in queue:
+                inst = self.macro.route(req, t)
+                if inst is None:
+                    if t - req.arrival_time > 4 * self.slo.ttft:
+                        self.macro.route_forced(req, t)
+                    else:
+                        still.append(req)
+            queue = still
+
+            # 2. each instance runs one slot of its current phase
+            progressed = False
+            for inst in self.instances:
+                progressed |= self._step_instance(inst)
+            if not progressed and not queue:
+                if pending:
+                    wait = max(0.0, pending[0].arrival_time - now())
+                    time.sleep(min(wait, 0.01) * time_scale)
+                else:
+                    time.sleep(0.001)
+        return ServeStats(self.finished)
+
+    # --------------------------------------------------------------- #
+    def _step_instance(self, inst: RealInstance) -> bool:
+        eng = inst.engine
+        if inst.pending and eng.free_slots() and \
+                inst._slack_allows_prefill(self._now(inst)):
+            req = inst.pending.pop(0)
+            inst.phase = "prefill"
+            eng.prefill(req)
+            req.state = RequestState.DECODING
+            req.first_token_time = self._now(inst)
+            req.tokens_generated = 1
+            if req.tokens_generated >= req.output_len:
+                self._finish(inst, req)
+            else:
+                inst.decoding.append(req)
+            return True
+        if inst.decoding:
+            inst.phase = "decode"
+            eng.decode_step()
+            tnow = self._now(inst)
+            for req in list(inst.decoding):
+                req.tokens_generated = len(req.generated)
+                if req.tokens_generated == 2:
+                    req.second_token_time = tnow
+                still_running = any(r is req for r in eng.slot_req)
+                if not still_running:
+                    inst.decoding.remove(req)
+                    self._finish(inst, req)
+            return True
+        inst.phase = "idle"
+        return False
+
+    def _finish(self, inst: RealInstance, req: Request) -> None:
+        req.state = RequestState.FINISHED
+        req.finish_time = self._now(inst)
+        self.finished.append(req)
+
+    def _now(self, inst=None) -> float:
+        if not hasattr(self, "_t0"):
+            return 0.0
+        return (time.perf_counter() - self._t0) / self._scale

@@ -1,0 +1,180 @@
+"""Analytical (roofline) instance cost model for the cluster simulator.
+
+Step durations are derived from the model config + hardware profile with
+per-phase efficiency factors calibrated against the paper's own Table 3
+measurements (Llama-30B prefill on an 8x L20 node: 6584.6 tok/s; on 8x
+A800: 26189.2 tok/s — see tests/test_cost_model.py for the check).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    flops: float               # peak bf16 FLOP/s per device
+    hbm_bw: float              # bytes/s per device
+    hbm_bytes: float           # capacity per device
+    intra_node_bw: float       # bytes/s per device for intra-node traffic
+    inter_node_bw: float       # bytes/s per NODE (NIC)
+    devices_per_node: int
+    prefill_eff: float         # achieved fraction of peak in prefill
+    decode_bw_eff: float       # achieved fraction of HBM bw in decode
+    comm_latency: float = 30e-6   # per collective hop
+
+
+# L20: 119.5 TF bf16 peak, 864 GB/s GDDR6, PCIe4 x16 (~25 GB/s eff),
+# 10 Gb Ethernet per node.  Efficiency calibrated to Table 3.
+GPU_L20 = HardwareProfile(
+    name="L20", flops=119.5e12, hbm_bw=864e9, hbm_bytes=48e9,
+    intra_node_bw=25e9, inter_node_bw=10e9 / 8, devices_per_node=8,
+    prefill_eff=0.47, decode_bw_eff=0.75)
+
+# A800: 312 TF bf16, 2039 GB/s HBM2e, NVLink absent in paper's PCIe setup,
+# 25 Gb RoCE per node.
+GPU_A800 = HardwareProfile(
+    name="A800", flops=312e12, hbm_bw=2039e9, hbm_bytes=80e9,
+    intra_node_bw=25e9, inter_node_bw=25e9 / 8, devices_per_node=8,
+    prefill_eff=0.60, decode_bw_eff=0.75)
+
+# TPU v5e (the build target): ICI intra-pod, slow DCN across pods.
+TPU_V5E_SIM = HardwareProfile(
+    name="tpu-v5e", flops=197e12, hbm_bw=819e9, hbm_bytes=16e9,
+    intra_node_bw=50e9, inter_node_bw=25e9 / 8, devices_per_node=256,
+    prefill_eff=0.55, decode_bw_eff=0.80)
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceCostModel:
+    """Cost model for ONE serving instance = `tp` x `pp` devices."""
+    cfg: ModelConfig
+    hw: HardwareProfile
+    tp: int = 1
+    pp: int = 1
+    dtype_bytes: int = 2
+
+    # ------------------------------------------------------------------ #
+    @property
+    def devices(self) -> int:
+        return self.tp * self.pp
+
+    @property
+    def param_bytes(self) -> int:
+        return self.cfg.param_count() * self.dtype_bytes
+
+    def kv_capacity_tokens(self) -> int:
+        """Tokens of KV cache that fit after weights (10% activation slack)."""
+        per_tok = self.cfg.kv_bytes_per_token(self.dtype_bytes)
+        if per_tok == 0:                       # attention-free: effectively
+            return 10_000_000                  # unbounded by KV memory
+        free = (self.hw.hbm_bytes * self.devices * 0.9) - self.param_bytes
+        return max(0, int(free / per_tok))
+
+    # ------------------------------------------------------------------ #
+    def _tp_comm_time(self, tokens: int) -> float:
+        """Megatron TP: 2 all-reduce per layer over activations."""
+        if self.tp == 1:
+            return 0.0
+        bytes_ar = tokens * self.cfg.d_model * self.dtype_bytes
+        wire = 2.0 * bytes_ar * (self.tp - 1) / self.tp      # ring
+        per_layer = wire / self.hw.intra_node_bw + self.hw.comm_latency
+        return 2 * self.cfg.num_layers * per_layer
+
+    def _pp_overhead(self, t_stage_total: float, microbatches: int) -> float:
+        """Pipeline bubble: (pp-1)/m extra on top of the stage time."""
+        if self.pp == 1:
+            return 0.0
+        return t_stage_total * (self.pp - 1) / max(1, microbatches)
+
+    # ------------------------------------------------------------------ #
+    def prefill_time(self, prompt_lens: List[int],
+                     kv_prefix_lens: Optional[List[int]] = None) -> float:
+        """One prefill batch (PaDG/NoDG: full prompts; Sarathi passes
+        chunks with kv_prefix_lens for the re-read of earlier chunks)."""
+        if not prompt_lens:
+            return 0.0
+        n_active = self.cfg.param_count(active_only=True)
+        tokens = sum(prompt_lens)
+        flops = 2.0 * n_active * tokens
+        # attention: 2 matmuls of S^2 * H per head-dim-summed layer
+        attn_layers = sum(
+            1 for k in self.cfg.block_kinds() if k in ("attn", "local"))
+        for i, s in enumerate(prompt_lens):
+            ctx = s + (kv_prefix_lens[i] if kv_prefix_lens else 0)
+            eff_ctx = min(ctx, self.cfg.sliding_window) if (
+                self.cfg.sliding_window) else ctx
+            flops += 4.0 * attn_layers * s * eff_ctx * self.cfg.d_model
+        t_compute = flops / (self.hw.flops * self.tp * self.hw.prefill_eff)
+        # weight + kv-prefix reads
+        bytes_moved = self.param_bytes / self.devices * min(
+            1.0, tokens / 256.0)   # weight reads amortize over the batch
+        if kv_prefix_lens:
+            bytes_moved += sum(kv_prefix_lens) * \
+                self.cfg.kv_bytes_per_token(self.dtype_bytes) / self.devices
+        t_mem = bytes_moved / (self.hw.hbm_bw * self.hw.decode_bw_eff)
+        t = max(t_compute, t_mem) / self.pp + self._tp_comm_time(tokens)
+        return t + self._pp_overhead(t, microbatches=len(prompt_lens))
+
+    def decode_time(self, batch_size: int, ctx_lens: List[int]) -> float:
+        """One decode iteration for `batch_size` sequences.
+
+        PP does NOT cut single-batch decode latency (Fig. 11's premise):
+        the pp stages run sequentially for one iteration, so weights/KV
+        stream through only a tp-wide memory system."""
+        if batch_size == 0:
+            return 0.0
+        n_active = self.cfg.param_count(active_only=True)
+        flops = 2.0 * n_active * batch_size
+        t_compute = flops / (self.hw.flops * self.tp * 0.35)
+        per_tok = self.cfg.kv_bytes_per_token(self.dtype_bytes)
+        eff_ctxs = [min(c, self.cfg.sliding_window) if self.cfg.sliding_window
+                    else c for c in ctx_lens]
+        kv_bytes = per_tok * sum(eff_ctxs)
+        bytes_moved = (self.param_bytes + kv_bytes) / self.tp
+        t_mem = bytes_moved / (self.hw.hbm_bw * self.hw.decode_bw_eff)
+        t = max(t_compute, t_mem) + self._tp_comm_time(batch_size)
+        # pp point-to-point hops (small activations)
+        t += (self.pp - 1) * self.hw.comm_latency
+        return t
+
+    def hybrid_time(self, chunk_lens: List[int], prefix_lens: List[int],
+                    decode_batch: int, decode_ctxs: List[int]) -> float:
+        """Sarathi-style fused iteration: decode batch + prefill chunks.
+        Compute and memory streams overlap; chunked prefill re-reads the
+        KV prefix of earlier chunks (the paper's §2.4.1 criticism)."""
+        n_active = self.cfg.param_count(active_only=True)
+        flops = 2.0 * n_active * (sum(chunk_lens) + decode_batch)
+        attn_layers = sum(
+            1 for k in self.cfg.block_kinds() if k in ("attn", "local"))
+        for s, p in zip(chunk_lens, prefix_lens):
+            flops += 4.0 * attn_layers * s * (s + p) * self.cfg.d_model
+        t_compute = flops / (self.hw.flops * self.tp * self.hw.prefill_eff)
+
+        per_tok = self.cfg.kv_bytes_per_token(self.dtype_bytes)
+        bytes_moved = self.param_bytes / self.devices
+        bytes_moved += per_tok * sum(prefix_lens) / self.devices  # re-read
+        eff_ctxs = [min(c, self.cfg.sliding_window) if self.cfg.sliding_window
+                    else c for c in decode_ctxs]
+        bytes_moved += per_tok * sum(eff_ctxs) / self.devices
+        t_mem = bytes_moved * self.pp / (
+            self.hw.hbm_bw * self.hw.decode_bw_eff)
+        tokens = sum(chunk_lens) + decode_batch
+        # hybrid iteration latency is decode-like: pp stages run
+        # sequentially (t_compute above is already tp-width)
+        t = max(t_compute, t_mem) + self._tp_comm_time(tokens)
+        t += (self.pp - 1) * self.hw.comm_latency
+        return t
+
+    # ------------------------------------------------------------------ #
+    def kv_transfer_bytes(self, prompt_len: int) -> int:
+        """KV cache bytes leaving a FuDG prefill instance per request."""
+        return prompt_len * self.cfg.kv_bytes_per_token(self.dtype_bytes)
+
+    def predict_prefill(self, prompt_len: int) -> float:
+        """Single-request prefill-duration predictor used by Algorithm 2
+        (paper: profiled offline over sequence lengths)."""
+        return self.prefill_time([prompt_len])

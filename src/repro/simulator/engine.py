@@ -1,0 +1,109 @@
+"""Discrete-event simulation engine.
+
+Drives any ``ServingSystem`` (PaDG / NoDG / FuDG variants): request
+arrivals, instance slot completions, and link transfers share one event
+heap.  Instances execute uninterruptible slots (prefill batch or decode
+iteration); systems decide routing and what happens at slot boundaries.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Dict, List, Optional, Protocol
+
+from repro.core.instance import Instance
+from repro.core.request import Request
+
+
+class Link:
+    """FIFO bandwidth resource (NIC / PCIe); serializes transfers."""
+
+    def __init__(self, name: str, bandwidth: float, latency: float = 1e-3):
+        self.name = name
+        self.bandwidth = bandwidth
+        self.latency = latency
+        self.busy_until = 0.0
+        self.bytes_moved = 0.0
+
+    def transfer(self, nbytes: float, now: float) -> float:
+        start = max(now, self.busy_until)
+        done = start + self.latency + nbytes / self.bandwidth
+        self.busy_until = done
+        self.bytes_moved += nbytes
+        return done
+
+
+class ServingSystem(Protocol):
+    instances: List[Instance]
+
+    def submit(self, req: Request, now: float, engine: "SimulationEngine"): ...
+    def on_slot_end(self, inst: Instance, kind: str, reqs: List[Request],
+                    now: float, engine: "SimulationEngine") -> None: ...
+
+
+@dataclasses.dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable = dataclasses.field(compare=False)
+
+
+class SimulationEngine:
+    def __init__(self, system: ServingSystem):
+        self.system = system
+        self.heap: List[_Event] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self._executing: Dict[int, bool] = {}
+        self.finished: List[Request] = []
+        self.on_tick: Optional[Callable[[float], None]] = None
+
+    # ------------------------------------------------------------------ #
+    def push(self, t: float, fn: Callable) -> None:
+        heapq.heappush(self.heap, _Event(t, next(self._seq), fn))
+
+    def activate(self, inst: Instance) -> None:
+        """Ensure the instance is executing a slot (idempotent)."""
+        if self._executing.get(inst.iid):
+            return
+        kind, dur, reqs = inst.next_slot(self.now)
+        if kind == "idle":
+            return
+        self._executing[inst.iid] = True
+        t_end = self.now + dur
+
+        def complete():
+            self._executing[inst.iid] = False
+            if kind == "prefill" and not getattr(inst, "decode_here", True):
+                # FuDG prefill instance: mark first token, hand off
+                for r in reqs:
+                    inst.pending.remove(r)
+                    r.first_token_time = t_end
+                    r.tokens_generated = 1
+                self.system.on_slot_end(inst, "prefill_handoff", reqs,
+                                        self.now, self)
+            else:
+                done = inst.complete_slot(kind, reqs, t_end)
+                self.finished.extend(done)
+                self.system.on_slot_end(inst, kind, reqs, self.now, self)
+            self.activate(inst)
+
+        self.push(t_end, complete)
+
+    # ------------------------------------------------------------------ #
+    def run(self, requests: List[Request], horizon: float) -> List[Request]:
+        for req in requests:
+            def arrive(r=req):
+                self.system.submit(r, self.now, self)
+            self.push(req.arrival_time, arrive)
+
+        while self.heap:
+            ev = heapq.heappop(self.heap)
+            if ev.time > horizon:
+                break
+            self.now = ev.time
+            ev.fn()
+            if self.on_tick:
+                self.on_tick(self.now)
+        return self.finished

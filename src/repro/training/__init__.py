@@ -1,0 +1,1 @@
+from repro.training.optimizer import AdamW, AdamWState  # noqa: F401

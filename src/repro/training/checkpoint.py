@@ -1,0 +1,46 @@
+"""Checkpointing: numpy-npz based, pytree-structure preserving."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _base(path: str) -> str:
+    return path[:-4] if path.endswith(".npz") else path
+
+
+def save_checkpoint(path: str, tree: Any, step: int = 0) -> None:
+    base = _base(path)
+    os.makedirs(os.path.dirname(base) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(base + ".npz", **arrays)
+    with open(base + ".meta.json", "w") as f:
+        json.dump({"step": step, "n_leaves": len(leaves),
+                   "treedef": str(treedef)}, f)
+
+
+def load_checkpoint(path: str, like: Any) -> Tuple[Any, int]:
+    """Restore into the structure of ``like`` (shape/dtype verified)."""
+    base = _base(path)
+    data = np.load(base + ".npz")
+    leaves, treedef = _flatten(like)
+    new_leaves = []
+    for i, leaf in enumerate(leaves):
+        arr = data[f"leaf_{i}"]
+        if hasattr(leaf, "shape") and tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(
+                f"leaf {i}: checkpoint shape {arr.shape} != {leaf.shape}")
+        new_leaves.append(arr)
+    with open(base + ".meta.json") as f:
+        meta = json.load(f)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), meta["step"]

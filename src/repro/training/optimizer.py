@@ -1,0 +1,61 @@
+"""Minimal pure-JAX AdamW (tree-based, no optax dependency)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray     # () int32
+    m: Any                # like params, f32
+    v: Any                # like params, f32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params: Any) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads: Any, state: AdamWState,
+               params: Any) -> Tuple[Any, AdamWState]:
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
+        step = state.step + 1
+        bc1 = 1.0 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32) * scale
+            m_new = self.b1 * m + (1 - self.b1) * g
+            v_new = self.b2 * v + (1 - self.b2) * jnp.square(g)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            delta = delta + self.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - self.lr * delta
+            return p_new.astype(p.dtype), m_new, v_new
+
+        # three passes (XLA CSEs the duplicated math under jit); avoids
+        # tuple-leaf transposition clashing with tuple-structured params
+        p_new = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[0],
+                             grads, state.m, state.v, params)
+        m_new = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[1],
+                             grads, state.m, state.v, params)
+        v_new = jax.tree.map(lambda g, m, v, p: upd(g, m, v, p)[2],
+                             grads, state.m, state.v, params)
+        return p_new, AdamWState(step=step, m=m_new, v=v_new)

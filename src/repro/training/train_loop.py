@@ -1,0 +1,53 @@
+"""Training loop (single-host or mesh-distributed via the same step
+builders the dry-run uses)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import init_params, make_loss_fn
+from repro.models.layers import MeshInfo
+from repro.training.checkpoint import save_checkpoint
+from repro.training.optimizer import AdamW
+
+
+def train(
+    cfg: ModelConfig,
+    batches: Iterator[Dict],
+    *,
+    steps: int = 200,
+    optimizer: AdamW = AdamW(lr=1e-3),
+    mi: MeshInfo = MeshInfo(),
+    dtype=jnp.float32,
+    seed: int = 0,
+    log_every: int = 10,
+    checkpoint_path: Optional[str] = None,
+    log_fn: Callable[[str], None] = print,
+):
+    params = init_params(jax.random.key(seed), cfg, dtype)
+    opt_state = optimizer.init(params)
+    loss_fn = make_loss_fn(cfg, mi)
+
+    @jax.jit
+    def step_fn(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state = optimizer.update(grads, opt_state, params)
+        return params, opt_state, loss
+
+    losses = []
+    t0 = time.perf_counter()
+    for step in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(batches).items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.perf_counter() - t0
+            log_fn(f"step {step:5d}  loss {losses[-1]:.4f}  "
+                   f"({dt / (step + 1):.3f}s/step)")
+    if checkpoint_path:
+        save_checkpoint(checkpoint_path, params, step=steps)
+    return params, losses

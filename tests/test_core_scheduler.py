@@ -1,0 +1,137 @@
+"""Unit tests for the PaDG core: Algorithms 1+2, temporal disaggregation,
+rolling activation, and the phase-switch bookkeeping."""
+import pytest
+
+from repro.core.constraints import check_constraints
+from repro.core.instance import Instance, InstanceStatus
+from repro.core.macro import MacroInstance
+from repro.core.request import Request, RequestState
+from repro.core.slo import SLO
+
+
+class FixedExecutor:
+    """Deterministic executor: prefill 10ms per 100 tokens, decode 20ms."""
+
+    def prefill_time(self, lens):
+        return 1e-4 * sum(lens)
+
+    def decode_time(self, batch, ctxs):
+        return 0.02
+
+
+def make_instance(iid=0, cap=100_000):
+    return Instance(iid, FixedExecutor(), kv_capacity_tokens=cap)
+
+
+def req(rid, t=0.0, plen=100, out=10):
+    return Request(rid=rid, arrival_time=t, prompt_len=plen, output_len=out)
+
+
+SLO_T = SLO(ttft=1.0, tpot=0.1)
+PREDICT = FixedExecutor().prefill_time
+
+
+def _pred(n):
+    return PREDICT([n])
+
+
+# --------------------------------------------------------------------- #
+def test_instance_prefill_priority_and_lifecycle():
+    inst = make_instance()
+    r = req(1, plen=200, out=3)
+    inst.admit(r, 0.0)
+    kind, dur, batch = inst.next_slot(0.0)
+    assert kind == "prefill" and batch == [r]
+    assert dur == pytest.approx(0.02)
+    inst.complete_slot(kind, batch, 0.02)
+    assert r.state == RequestState.DECODING
+    assert r.first_token_time == pytest.approx(0.02)
+    # two decode iterations finish the request (out=3: 1 from prefill)
+    for i in range(2):
+        kind, dur, batch = inst.next_slot(0.02)
+        assert kind == "decode"
+        inst.complete_slot(kind, batch, 0.02 + (i + 1) * dur)
+    assert r.state == RequestState.FINISHED
+    assert r.tokens_generated == 3
+
+
+def test_temporal_disaggregation_phase_switches():
+    """Admitting prefills during decode switches the phase at the slot
+    boundary, not mid-slot."""
+    inst = make_instance()
+    a = req(1, plen=100, out=50)
+    inst.admit(a, 0.0)
+    k, d, b = inst.next_slot(0.0)
+    inst.complete_slot(k, b, d)
+    k2, _, b2 = inst.next_slot(d)
+    assert k2 == "decode"
+    # new admission -> next slot is prefill (prefill priority)
+    b_req = req(2, plen=100)
+    inst.admit(b_req, d)
+    inst.complete_slot(k2, b2, d + 0.02)
+    k3, _, b3 = inst.next_slot(d + 0.02)
+    assert k3 == "prefill" and b3 == [b_req]
+
+
+# --------------------------------------------------------------------- #
+def test_constraint1_ttft_rejects_when_queue_too_long():
+    inst = make_instance()
+    # 9500 tokens of pending prefill ~ 0.95s; + 1000 more breaks 1s SLO
+    for i in range(5):
+        inst.admit(req(i, plen=1900), 0.0)
+    status = inst.status(0.0, SLO_T.tpot)
+    assert not check_constraints(status, req(99, plen=1000), SLO_T,
+                                 _pred, 0.0)
+    assert check_constraints(status, req(99, plen=100), SLO_T, _pred, 0.0)
+
+
+def test_constraint2_tpot_saved_slack():
+    inst = make_instance()
+    r = req(1, plen=100, out=500)
+    inst.admit(r, 0.0)
+    k, d, b = inst.next_slot(0.0)
+    inst.complete_slot(k, b, 0.01)
+    # r decoding since t=0.01 with 1 token: at t=0.02 saved = 1*0.1-0.01
+    status = inst.status(0.02, SLO_T.tpot)
+    assert status.saved_tpots[0] == pytest.approx(0.09)
+    # inserting 0.5s of prefill work would violate TPOT
+    assert not check_constraints(status, req(2, plen=5000), SLO_T,
+                                 _pred, 0.02)
+    # tiny prefill is fine
+    assert check_constraints(status, req(2, plen=100), SLO_T, _pred, 0.02)
+    # after many on-time tokens the slack has grown; big prefill now fits
+    r.tokens_generated = 40
+    status = inst.status(0.5, SLO_T.tpot)
+    assert check_constraints(status, req(2, plen=5000), SLO_T, _pred, 0.5)
+
+
+def test_constraint3_memory():
+    inst = make_instance(cap=1000)
+    status = inst.status(0.0, SLO_T.tpot)
+    assert not check_constraints(status, req(1, plen=600), SLO_T, _pred, 0.0)
+    assert check_constraints(status, req(1, plen=400), SLO_T, _pred, 0.0)
+
+
+# --------------------------------------------------------------------- #
+def test_rolling_activation_cycles_instances():
+    """When the sticky instance exhausts its TTFT budget, routing moves to
+    the next instance cyclically (rolling activation)."""
+    instances = [make_instance(i) for i in range(3)]
+    macro = MacroInstance(0, instances, SLO_T, _pred)
+    # each request ~0.4s of prefill: two fit per instance within 1s TTFT
+    routed = []
+    for i in range(6):
+        inst = macro.route(req(i, plen=4000), 0.0)
+        assert inst is not None
+        routed.append(inst.iid)
+    assert routed == [0, 0, 1, 1, 2, 2]
+    # all instances saturated now
+    assert macro.route(req(99, plen=4000), 0.0) is None
+
+
+def test_sticky_routing_prefers_last_instance():
+    instances = [make_instance(i) for i in range(3)]
+    macro = MacroInstance(0, instances, SLO_T, _pred)
+    a = macro.route(req(1, plen=100), 0.0)
+    b = macro.route(req(2, plen=100), 0.0)
+    assert a.iid == b.iid  # Algorithm 1 line 2: same instance first

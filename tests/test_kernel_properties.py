@@ -1,0 +1,88 @@
+"""Hypothesis property tests for the Pallas kernels (interpret mode):
+random shapes/block sizes must match the oracles, and the serving-path
+invariant (decode-over-cache == last prefill row) must hold."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.rglru_scan import rglru_scan
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape):
+    return jnp.asarray(RNG.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.integers(8, 96),
+    hkv=st.sampled_from([1, 2, 4]),
+    g=st.sampled_from([1, 2, 3]),
+    d=st.sampled_from([32, 64]),
+    bq=st.sampled_from([16, 32]),
+    bk=st.sampled_from([16, 64]),
+)
+def test_flash_prefill_random_shapes(t, hkv, g, d, bq, bk):
+    q = rand(1, t, hkv * g, d)
+    k = rand(1, t, hkv, d)
+    v = rand(1, t, hkv, d)
+    out = flash_prefill(q, k, v, causal=True, block_q=bq, block_k=bk,
+                        interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    s=st.integers(16, 300),
+    hkv=st.sampled_from([1, 2]),
+    g=st.sampled_from([1, 4]),
+    bs=st.sampled_from([32, 128]),
+    data=st.data(),
+)
+def test_decode_attention_random_lengths(s, hkv, g, bs, data):
+    B, D = 2, 64
+    lengths = jnp.asarray(
+        [data.draw(st.integers(1, s)) for _ in range(B)], jnp.int32)
+    q = rand(B, hkv * g, D)
+    kc, vc = rand(B, s, hkv, D), rand(B, s, hkv, D)
+    out = decode_attention(q, kc, vc, lengths, block_s=bs, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_decode_equals_prefill_last_position():
+    """Decoding the (T)th token against a T-entry cache equals row T of a
+    (T+1)-long prefill — the serving-path consistency invariant."""
+    T, Hkv, G, D = 33, 2, 2, 64
+    q_full = rand(1, T + 1, Hkv * G, D)
+    k_full = rand(1, T + 1, Hkv, D)
+    v_full = rand(1, T + 1, Hkv, D)
+    full = ref.flash_prefill_ref(q_full, k_full, v_full, causal=True)
+    out = decode_attention(q_full[:, -1], k_full, v_full,
+                           jnp.asarray([T + 1], jnp.int32),
+                           block_s=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(full[0, -1]),
+                               rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    t=st.integers(4, 80),
+    d=st.sampled_from([32, 96]),
+    bt=st.sampled_from([8, 32]),
+    bd=st.sampled_from([32, 64]),
+)
+def test_rglru_random_shapes(t, d, bt, bd):
+    la = -jnp.abs(rand(1, t, d)) * 0.2
+    b = rand(1, t, d) * 0.5
+    out = rglru_scan(la, b, block_t=bt, block_d=bd, interpret=True)
+    want = ref.rglru_scan_ref(la, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,159 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracles,
+sweeping shapes and dtypes (deliverable (c))."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+
+RNG = np.random.default_rng(42)
+
+
+def rand(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# ---------------------------------------------------------------------- #
+# flash prefill
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,T,S,Hq,Hkv,D", [
+    (1, 128, 128, 4, 4, 64),       # MHA square
+    (2, 128, 128, 8, 2, 64),       # GQA 4:1
+    (1, 96, 96, 4, 1, 128),        # MQA, non-multiple T
+    (2, 256, 256, 10, 2, 128),     # G=5 odd grouping
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_prefill_matches_ref(B, T, S, Hq, Hkv, D, dtype):
+    q = rand(B, T, Hq, D, dtype=dtype)
+    k = rand(B, S, Hkv, D, dtype=dtype)
+    v = rand(B, S, Hkv, D, dtype=dtype)
+    out = flash_prefill(q, k, v, causal=True, block_q=64, block_k=64,
+                        interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, causal=True)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64])
+def test_flash_prefill_sliding_window(window):
+    B, T, Hq, Hkv, D = 1, 160, 4, 2, 64
+    q, k, v = rand(B, T, Hq, D), rand(B, T, Hkv, D), rand(B, T, Hkv, D)
+    out = flash_prefill(q, k, v, causal=True, window=window,
+                        block_q=64, block_k=64, interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_chunked_offset():
+    """Chunked prefill: queries at offset attend to the kv prefix."""
+    B, Hq, Hkv, D = 1, 4, 2, 64
+    S, chunk, off = 192, 64, 128
+    q = rand(B, chunk, Hq, D)
+    k, v = rand(B, S, Hkv, D), rand(B, S, Hkv, D)
+    out = flash_prefill(q, k, v, causal=True, q_offset=off,
+                        block_q=32, block_k=64, interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, causal=True, q_offset=off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_prefill_encoder_bidirectional():
+    B, T, H, D = 1, 128, 4, 64
+    q, k, v = rand(B, T, H, D), rand(B, T, H, D), rand(B, T, H, D)
+    out = flash_prefill(q, k, v, causal=False, block_q=64, block_k=64,
+                        interpret=True)
+    want = ref.flash_prefill_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------- #
+# decode attention
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,S,Hq,Hkv,D,block_s", [
+    (2, 256, 8, 2, 64, 64),
+    (4, 1000, 4, 4, 128, 256),     # ragged, non-multiple S
+    (1, 512, 10, 2, 64, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(B, S, Hq, Hkv, D, block_s, dtype):
+    q = rand(B, Hq, D, dtype=dtype)
+    kc = rand(B, S, Hkv, D, dtype=dtype)
+    vc = rand(B, S, Hkv, D, dtype=dtype)
+    lengths = jnp.asarray(RNG.integers(1, S + 1, B), jnp.int32)
+    out = decode_attention(q, kc, vc, lengths, block_s=block_s,
+                           interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------- #
+# RG-LRU scan
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,T,d,bt,bd", [
+    (2, 64, 128, 32, 64),
+    (1, 100, 256, 64, 128),        # non-multiple T
+    (3, 32, 96, 32, 128),          # non-multiple d
+])
+def test_rglru_scan_matches_ref(B, T, d, bt, bd):
+    log_a = -jnp.abs(rand(B, T, d)) * 0.1
+    b = rand(B, T, d) * 0.3
+    h0 = rand(B, d)
+    out = rglru_scan(log_a, b, h0, block_t=bt, block_d=bd, interpret=True)
+    want = ref.rglru_scan_ref(log_a, b, h0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_matches_model_layer_scan():
+    """Kernel agrees with the associative-scan used inside the model."""
+    from repro.models.layers import rglru_scan_jnp
+    B, T, d = 2, 48, 64
+    log_a = -jnp.abs(rand(B, T, d)) * 0.2
+    b = rand(B, T, d)
+    out_kernel = rglru_scan(log_a, b, block_t=16, block_d=64, interpret=True)
+    out_model = rglru_scan_jnp(log_a, b)
+    np.testing.assert_allclose(np.asarray(out_kernel),
+                               np.asarray(out_model), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------- #
+# RWKV6 scan
+# ---------------------------------------------------------------------- #
+@pytest.mark.parametrize("B,T,H,D,bt", [
+    (1, 64, 2, 64, 16),
+    (2, 96, 4, 32, 32),            # non-multiple T
+])
+def test_rwkv6_scan_matches_ref(B, T, H, D, bt):
+    r = rand(B, T, H, D) * 0.5
+    k = rand(B, T, H, D) * 0.5
+    v = rand(B, T, H, D) * 0.5
+    w = jnp.asarray(RNG.uniform(0.6, 0.999, (B, T, H, D)), jnp.float32)
+    u = rand(H, D) * 0.1
+    out = rwkv6_scan(r, k, v, w, u, block_t=bt, interpret=True)
+    want, _ = ref.rwkv6_ref(r, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rwkv6_kernel_matches_model_chunked():
+    from repro.models.layers import rwkv6_chunked_jnp
+    B, T, H, D = 1, 80, 2, 32
+    r, k, v = rand(B, T, H, D), rand(B, T, H, D), rand(B, T, H, D)
+    w = jnp.asarray(RNG.uniform(0.7, 0.999, (B, T, H, D)), jnp.float32)
+    u = rand(H, D) * 0.1
+    out_kernel = rwkv6_scan(r, k, v, w, u, block_t=32, interpret=True)
+    out_model, _ = rwkv6_chunked_jnp(r, k, v, w, u, chunk=32)
+    np.testing.assert_allclose(np.asarray(out_kernel),
+                               np.asarray(out_model), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,139 @@
+"""Property-based tests (hypothesis) for the system's invariants."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.constraints import check_constraints
+from repro.core.instance import Instance, InstanceStatus
+from repro.core.mitosis import OverallScheduler, register_instance
+from repro.core.request import Request
+from repro.core.slo import SLO
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.configs import get_config
+
+
+class Exec:
+    def prefill_time(self, lens):
+        return 1e-4 * sum(lens)
+
+    def decode_time(self, b, c):
+        return 0.02
+
+
+PRED = lambda n: 1e-4 * n
+
+
+# --------------------------------------------------------------------- #
+@settings(max_examples=60, deadline=None)
+@given(
+    pending=st.lists(st.integers(1, 4000), max_size=8),
+    saved=st.lists(st.floats(-1.0, 10.0), max_size=8),
+    new_len=st.integers(1, 4096),
+    kv_free=st.integers(0, 100_000),
+)
+def test_constraint_check_is_safe(pending, saved, new_len, kv_free):
+    """Whenever Algorithm 2 admits, the admitted prefill queue fits the
+    TTFT budget, decode slack covers it, and memory suffices."""
+    slo = SLO(ttft=1.0, tpot=0.1)
+    status = InstanceStatus(
+        iid=0, phase="prefill", pending_prefill_lens=pending,
+        pending_prefill_tokens=sum(pending), num_decoding=len(saved),
+        saved_tpots=saved, kv_tokens_used=100_000 - kv_free,
+        kv_tokens_capacity=100_000, last_switch_time=0.0,
+        decode_iter_time_plus_one=0.02)
+    req = Request(rid=1, arrival_time=0.0, prompt_len=new_len, output_len=5)
+    ok = check_constraints(status, req, slo, PRED, 0.0)
+    t_total = PRED(new_len) + sum(PRED(n) for n in pending)
+    if ok:
+        assert t_total <= slo.ttft + 1e-9
+        if saved:
+            assert np.mean(saved) >= t_total - 1e-9
+        assert 2 * new_len <= kv_free
+    # conservative admission implies plain admission
+    ok_cons = check_constraints(status, req, slo, PRED, 0.0,
+                                conservative=True)
+    if ok_cons:
+        assert ok
+
+
+# --------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(
+    arrivals=st.lists(
+        st.tuples(st.floats(0.0, 5.0), st.integers(1, 500),
+                  st.integers(1, 20)),
+        min_size=1, max_size=30),
+)
+def test_instance_conservation_and_monotonicity(arrivals):
+    """Every admitted request finishes exactly once with exactly
+    output_len tokens; event times are monotone per request."""
+    inst = Instance(0, Exec(), kv_capacity_tokens=10**9)
+    reqs = [Request(rid=i, arrival_time=t, prompt_len=p, output_len=o)
+            for i, (t, p, o) in enumerate(arrivals)]
+    now = 0.0
+    idx = 0
+    reqs.sort(key=lambda r: r.arrival_time)
+    finished = []
+    for _ in range(100_000):
+        while idx < len(reqs) and reqs[idx].arrival_time <= now:
+            inst.admit(reqs[idx], now)
+            idx += 1
+        kind, dur, batch = inst.next_slot(now)
+        if kind == "idle":
+            if idx >= len(reqs):
+                break
+            now = reqs[idx].arrival_time
+            continue
+        now += dur
+        finished.extend(inst.complete_slot(kind, batch, now))
+    assert len(finished) == len(reqs)
+    assert sorted(r.rid for r in finished) == sorted(r.rid for r in reqs)
+    for r in finished:
+        assert r.tokens_generated == r.output_len
+        assert r.first_token_time >= r.arrival_time
+        assert r.finish_time >= r.first_token_time
+
+
+# --------------------------------------------------------------------- #
+@settings(max_examples=30, deadline=None)
+@given(ops=st.lists(st.booleans(), min_size=1, max_size=60),
+       n_l=st.integers(1, 4), n_u_extra=st.integers(0, 6))
+def test_mitosis_invariants(ops, n_l, n_u_extra):
+    """Under any add/remove sequence: macro sizes stay within [1, N_u],
+    instance count is conserved, and at most two macros are non-full."""
+    n_u = n_l + n_u_extra
+    s = OverallScheduler(SLO(1.0, 0.1), PRED, n_lower=n_l, n_upper=n_u)
+    count = 0
+    nid = 0
+    for add in ops:
+        if add or count == 0:
+            inst = Instance(nid, Exec(), kv_capacity_tokens=1000)
+            register_instance(inst)
+            s.add_instance(inst)
+            nid += 1
+            count += 1
+        else:
+            if s.remove_instance() is not None:
+                count -= 1
+    assert s.total_instances == count
+    for m in s.macros:
+        assert 1 <= m.size <= n_u
+
+
+# --------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(
+    lens=st.lists(st.integers(1, 4096), min_size=1, max_size=16),
+    batch=st.integers(1, 256),
+)
+def test_cost_model_positive_and_monotone(lens, batch):
+    cm = InstanceCostModel(cfg=get_config("llama-30b"), hw=GPU_L20, tp=4)
+    t = cm.prefill_time(lens)
+    assert t > 0 and math.isfinite(t)
+    assert cm.prefill_time(lens + [128]) > t        # more work, more time
+    ctxs = [100] * batch
+    td = cm.decode_time(batch, ctxs)
+    assert td > 0
+    assert cm.decode_time(batch, [c * 2 for c in ctxs]) >= td

@@ -1,0 +1,71 @@
+"""Unit tests for the HLO cost parser (roofline derivation)."""
+import textwrap
+
+from repro.roofline.analysis import roofline_terms
+from repro.roofline.hlo_costs import analyze_hlo
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %add (x: f32[], y: f32[]) -> f32[] {
+      %x = f32[] parameter(0)
+      %y = f32[] parameter(1)
+      ROOT %z = f32[] add(%x, %y)
+    }
+
+    %body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+      %p = (s32[], f32[8,128]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %x = f32[8,128] get-tuple-element(%p), index=1
+      %w = f32[128,128] constant({...})
+      %dot.1 = f32[8,128] dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,128] all-reduce(%dot.1), replica_groups={}, to_apply=%add
+      ROOT %t = (s32[], f32[8,128]) tuple(%i, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,128])) -> pred[] {
+      %p = (s32[], f32[8,128]) parameter(0)
+      %i = s32[] get-tuple-element(%p), index=0
+      %n = s32[] constant(4)
+      ROOT %lt = pred[] compare(%i, %n), direction=LT
+    }
+
+    ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+      %a = f32[8,128] parameter(0)
+      %w0 = f32[128,128] constant({...})
+      %dot.0 = f32[8,128] dot(%a, %w0), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %init = (s32[], f32[8,128]) tuple(%c0, %dot.0)
+      %while.1 = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+      ROOT %out = f32[8,128] get-tuple-element(%while.1), index=1
+    }
+    """)
+
+
+def test_dot_flops_with_loop_trip_counts():
+    hc = analyze_hlo(HLO)
+    # dot flops: 2*8*128*128 once (entry) + 4x in the while body
+    one_dot = 2 * 8 * 128 * 128
+    assert hc.flops == one_dot * (1 + 4)
+
+
+def test_collective_bytes_with_trip_and_ring_factor():
+    hc = analyze_hlo(HLO)
+    ar_bytes = 8 * 128 * 4
+    assert hc.wire_bytes == ar_bytes * 2.0 * 4       # ring 2x, 4 trips
+    assert hc.collectives["all-reduce"]["count"] == 4
+
+
+def test_memory_counts_loop_body():
+    hc = analyze_hlo(HLO)
+    assert hc.hbm_bytes > 0
+    # the body's dot reads x(4KiB)+w(64KiB)+writes 4KiB, 4 trips at least
+    assert hc.hbm_bytes >= (8 * 128 * 4 * 2 + 128 * 128 * 4) * 4
+
+
+def test_roofline_terms_dominant():
+    t = roofline_terms(1e15, 1e9, 1e6)
+    assert t["dominant"] == "compute"
+    t = roofline_terms(1e12, 1e13, 1e6)
+    assert t["dominant"] == "memory"
+    t = roofline_terms(1e12, 1e9, 1e12)
+    assert t["dominant"] == "collective"

@@ -1,0 +1,99 @@
+"""Real-execution serving: continuous batching engine + PaDG server on a
+tiny model (CPU), and greedy-decoding equivalence with plain forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.request import Request
+from repro.core.slo import SLO
+from repro.models import forward, init_params
+from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.padg_server import PaDGServer
+
+
+def tiny_cfg():
+    cfg = get_smoke_config("llama3-8b")
+    return dataclasses.replace(cfg, num_layers=2, d_model=128, num_heads=2,
+                               num_kv_heads=1, head_dim=64, d_ff=256,
+                               vocab_size=300)
+
+
+def greedy_reference(cfg, params, prompt, n_new):
+    """Teacher-forced greedy decoding via repeated full forward."""
+    toks = list(prompt)
+    for _ in range(n_new):
+        logits, _ = forward(params, cfg,
+                            {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    return toks[len(prompt):]
+
+
+def test_engine_matches_full_forward_greedy():
+    cfg = tiny_cfg()
+    eng = ServingEngine(cfg, seed=3,
+                        econf=EngineConfig(max_batch=2, max_seq_len=64,
+                                           eos_token=-1))
+    prompt = [5, 9, 17, 4, 33]
+    n_new = 6
+    want = greedy_reference(cfg, eng.params, prompt, n_new)
+
+    req = Request(rid=0, arrival_time=0.0, prompt_len=len(prompt),
+                  output_len=n_new, prompt_tokens=prompt)
+    eng.prefill(req)
+    while len(req.generated) < n_new:
+        eng.decode_step()
+    assert req.generated == want
+
+
+def test_engine_concurrent_requests_isolated():
+    """Two interleaved requests must produce the same tokens as served
+    alone (KV-slot isolation under continuous batching)."""
+    cfg = tiny_cfg()
+    eng = ServingEngine(cfg, seed=4,
+                        econf=EngineConfig(max_batch=2, max_seq_len=64,
+                                           eos_token=-1))
+    p1, p2 = [7, 3, 11], [21, 9, 2, 40, 8]
+    solo1 = greedy_reference(cfg, eng.params, p1, 5)
+    solo2 = greedy_reference(cfg, eng.params, p2, 5)
+
+    r1 = Request(rid=1, arrival_time=0, prompt_len=len(p1), output_len=5,
+                 prompt_tokens=p1)
+    r2 = Request(rid=2, arrival_time=0, prompt_len=len(p2), output_len=5,
+                 prompt_tokens=p2)
+    eng.prefill(r1)
+    eng.decode_step()          # r1 advances alone
+    eng.prefill(r2)            # r2 joins mid-flight
+    for _ in range(6):
+        eng.decode_step()
+    assert r1.generated[:5] == solo1
+    assert r2.generated[:5] == solo2
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "rwkv6-3b"])
+def test_padg_server_end_to_end(arch):
+    cfg = get_smoke_config(arch)
+    cfg = dataclasses.replace(cfg, num_layers=2, d_model=128,
+                              num_heads=2, num_kv_heads=max(1, min(
+                                  2, cfg.num_kv_heads)), head_dim=64,
+                              d_ff=256, vocab_size=300)
+    slo = SLO(ttft=60.0, tpot=10.0)   # wall-clock CPU: loose SLOs
+    server = PaDGServer(cfg, n_instances=2, slo=slo,
+                        econf=EngineConfig(max_batch=2, max_seq_len=48,
+                                           eos_token=-1))
+    rng = np.random.default_rng(0)
+    reqs = []
+    for i in range(6):
+        plen = int(rng.integers(3, 10))
+        reqs.append(Request(
+            rid=i, arrival_time=0.02 * i, prompt_len=plen, output_len=4,
+            prompt_tokens=[int(x) for x in rng.integers(2, 290, plen)]))
+    stats = server.serve(reqs)
+    s = stats.summary()
+    assert s["finished"] == 6
+    for r in stats.finished:
+        assert len(r.generated) == 4
+        assert r.finish_time >= r.first_token_time >= 0

@@ -1,0 +1,85 @@
+"""End-to-end simulator behaviour: all five systems serve workloads to
+completion; EcoServe (PaDG) sustains higher goodput than the baselines on
+the commodity-interconnect cluster (the paper's headline claim)."""
+import functools
+
+import pytest
+
+from repro.baselines import (DistServeSystem, MoonCakeSystem, SarathiSystem,
+                             VLLMSystem)
+from repro.configs import get_config
+from repro.core.padg_system import EcoServeSystem
+from repro.core.slo import DATASET_SLOS, attainment
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.simulator.engine import SimulationEngine
+from repro.simulator.metrics import run_once
+from repro.simulator.workload import WORKLOADS, WorkloadGen
+
+CFG = get_config("llama-30b")
+COST = InstanceCostModel(cfg=CFG, hw=GPU_L20, tp=4)
+SLO = DATASET_SLOS["sharegpt"]
+N_INST = 8   # 32 GPUs / TP4, the paper's L20 setup
+
+
+def _system(name):
+    if name == "ecoserve":
+        return EcoServeSystem(COST, N_INST, SLO, n_lower=4, n_upper=16)
+    if name == "vllm":
+        return VLLMSystem(COST, N_INST)
+    if name == "sarathi":
+        return SarathiSystem(COST, N_INST)
+    if name == "distserve":
+        return DistServeSystem(COST, N_INST, prefill_ratio=0.25)
+    if name == "mooncake":
+        return MoonCakeSystem(COST, N_INST, prefill_ratio=0.25)
+    raise KeyError(name)
+
+
+@pytest.mark.parametrize("name",
+                         ["ecoserve", "vllm", "sarathi", "distserve",
+                          "mooncake"])
+def test_system_completes_all_requests(name):
+    m = run_once(functools.partial(_system, name), WORKLOADS["sharegpt"],
+                 rate=1.0, slo=SLO, duration=60.0, warmup=5.0)
+    assert m["completion"] > 0.95, m
+    assert m["finished"] > 20
+
+
+def test_requests_complete_exactly_once_and_monotonic_times():
+    system = _system("ecoserve")
+    gen = WorkloadGen(WORKLOADS["sharegpt"], rate=2.0, seed=1)
+    reqs = gen.generate(60.0)
+    eng = SimulationEngine(system)
+    done = eng.run(reqs, horizon=200.0)
+    rids = [r.rid for r in done]
+    assert len(rids) == len(set(rids))
+    for r in done:
+        assert r.first_token_time >= r.arrival_time
+        assert r.finish_time >= r.first_token_time
+        assert r.tokens_generated == r.output_len
+
+
+def test_padg_beats_nodg_at_high_load():
+    """Above vLLM's P90 capacity (~31 req/s in the Fig. 8 run), EcoServe
+    keeps a higher share of requests within SLO."""
+    rate = 34.0
+    eco = run_once(functools.partial(_system, "ecoserve"),
+                   WORKLOADS["sharegpt"], rate, SLO, duration=60.0)
+    vllm = run_once(functools.partial(_system, "vllm"),
+                    WORKLOADS["sharegpt"], rate, SLO, duration=60.0)
+    assert eco["attainment"] > vllm["attainment"], (eco, vllm)
+
+
+def test_fudg_suffers_on_commodity_ethernet():
+    """MoonCake over 10 Gb Ethernet with an MHA model (huge KV) is
+    transfer-bound at moderate load (paper Fig. 8, Llama-30B)."""
+    rate = 16.0
+    eco = run_once(functools.partial(_system, "ecoserve"),
+                   WORKLOADS["sharegpt"], rate, SLO, duration=60.0)
+    mc = run_once(functools.partial(_system, "mooncake"),
+                  WORKLOADS["sharegpt"], rate, SLO, duration=60.0)
+    # FuDG fails by *not finishing* requests (transfer queue grows without
+    # bound): compare goodput-style attainment x completion
+    eco_eff = eco["attainment"] * min(1.0, eco["completion"])
+    mc_eff = mc["attainment"] * min(1.0, mc["completion"])
+    assert eco_eff > mc_eff + 0.3, (eco, mc)
