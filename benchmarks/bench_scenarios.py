@@ -1,0 +1,58 @@
+"""Scenario grid: every strategy under every traffic shape (beyond-paper).
+
+Sweeps {EcoServe, vLLM, Sarathi, DistServe, MoonCake} x {poisson, bursty,
+diurnal, trace-replay} with the unified ``ExperimentRunner`` and prints
+one CSV row per cell.  ``--write-golden`` regenerates the deterministic
+regression fixture consumed by ``tests/test_scenarios.py``:
+
+    PYTHONPATH=src python -m benchmarks.bench_scenarios --write-golden
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+
+from repro.simulator.runner import ExperimentRunner, regression_runner
+
+GOLDEN_PATH = (pathlib.Path(__file__).resolve().parent.parent
+               / "tests" / "golden" / "scenario_grid.json")
+
+
+def run(quick: bool = True) -> dict:
+    runner = regression_runner() if quick else ExperimentRunner(
+        scenarios=("poisson", "bursty", "diurnal", "ramp", "replay"),
+        rates=(8.0, 16.0, 24.0), duration=60.0, base_seed=0)
+    t0 = time.time()
+    results = runner.run()
+    dt = time.time() - t0
+    print("strategy,scenario,rate,attainment,completion,"
+          "ttft_p50,ttft_p99")
+    for cell in results["cells"]:
+        m = cell["metrics"]
+        print(f"{cell['strategy']},{cell['scenario']},{cell['rate']},"
+              f"{m.get('attainment', 0):.4f},{m.get('completion', 0):.4f},"
+              f"{m.get('ttft_p50', 0):.4f},{m.get('ttft_p99', 0):.4f}")
+    n = len(results["cells"])
+    print(f"\n{n} cells in {dt:.1f}s "
+          f"({dt / max(1, n):.2f}s/cell wall-amortized)")
+    return results
+
+
+def write_golden() -> None:
+    results = regression_runner().run()
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    ExperimentRunner.save(results, GOLDEN_PATH)
+    print(f"wrote {len(results['cells'])} cells to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--write-golden", action="store_true",
+                    help="regenerate tests/golden/scenario_grid.json")
+    args = ap.parse_args()
+    if args.write_golden:
+        write_golden()
+    else:
+        run(quick=not args.full)

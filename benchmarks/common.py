@@ -7,10 +7,8 @@ import functools
 import time
 from typing import Callable, Dict
 
-from repro.baselines import (DistServeSystem, MoonCakeSystem, SarathiSystem,
-                             VLLMSystem)
+from repro.baselines import make_system
 from repro.configs import get_config
-from repro.core.padg_system import EcoServeSystem
 from repro.core.slo import DATASET_SLOS
 from repro.simulator.cost_model import (GPU_A800, GPU_L20, HardwareProfile,
                                         InstanceCostModel)
@@ -27,23 +25,7 @@ def make_cost(model: str = "llama-30b", hw: HardwareProfile = GPU_L20,
 
 def system_factory(name: str, cost: InstanceCostModel, n_instances: int,
                    slo, **kw) -> Callable[[], object]:
-    def make():
-        if name == "ecoserve":
-            return EcoServeSystem(cost, n_instances, slo)
-        if name == "ecoserve++":
-            return EcoServeSystem(cost, n_instances, slo, plus_plus=True)
-        if name == "vllm":
-            return VLLMSystem(cost, n_instances)
-        if name == "sarathi":
-            return SarathiSystem(cost, n_instances)
-        if name == "distserve":
-            return DistServeSystem(cost, n_instances,
-                                   prefill_ratio=kw.get("pr", 0.25))
-        if name == "mooncake":
-            return MoonCakeSystem(cost, n_instances,
-                                  prefill_ratio=kw.get("pr", 0.25))
-        raise KeyError(name)
-    return make
+    return functools.partial(make_system, name, cost, n_instances, slo, **kw)
 
 
 def timed(fn: Callable, *args, **kw):

@@ -17,6 +17,7 @@ BENCHES = [
     ("table2_arithmetic_intensity", "benchmarks.bench_arithmetic_intensity"),
     ("table3_kv_bandwidth", "benchmarks.bench_kv_bandwidth"),
     ("fig8_e2e_goodput", "benchmarks.bench_e2e_goodput"),
+    ("scenario_grid", "benchmarks.bench_scenarios"),
     ("fig9_static_scaling", "benchmarks.bench_scaling_static"),
     ("fig10_dynamic_scaling", "benchmarks.bench_scaling_dynamic"),
     ("fig11_pp_compat", "benchmarks.bench_pp_compat"),

@@ -1,8 +1,10 @@
 """Strategy comparison on the simulated 32x L20 cluster (a mini Fig. 8):
 EcoServe (PaDG) vs vLLM / Sarathi (NoDG) vs DistServe / MoonCake (FuDG)
-serving Llama-30B on the ShareGPT workload.
+serving Llama-30B, under any arrival scenario (poisson / bursty / diurnal
+/ ramp / trace replay).
 
-    PYTHONPATH=src python examples/compare_strategies.py [--rate 24]
+    PYTHONPATH=src python examples/compare_strategies.py \
+        [--rate 24] [--scenario bursty]
 """
 import argparse
 
@@ -13,38 +15,39 @@ def main():
     ap.add_argument("--model", default="llama-30b")
     ap.add_argument("--workload", default="sharegpt",
                     choices=["alpaca", "sharegpt", "longbench"])
+    ap.add_argument("--scenario", default="poisson",
+                    choices=["poisson", "bursty", "diurnal", "ramp",
+                             "replay"])
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    from repro.baselines import (DistServeSystem, MoonCakeSystem,
-                                 SarathiSystem, VLLMSystem)
+    from repro.baselines import make_system
     from repro.configs import get_config
-    from repro.core.padg_system import EcoServeSystem
     from repro.core.slo import DATASET_SLOS
     from repro.simulator.cost_model import GPU_L20, InstanceCostModel
     from repro.simulator.metrics import run_once
-    from repro.simulator.workload import WORKLOADS
+    from repro.simulator.scenarios import make_scenario
 
     cost = InstanceCostModel(cfg=get_config(args.model), hw=GPU_L20, tp=4)
     slo = DATASET_SLOS[args.workload]
-    profile = WORKLOADS[args.workload]
-    systems = {
-        "EcoServe (PaDG)": lambda: EcoServeSystem(cost, 8, slo),
-        "EcoServe++ (beyond-paper)":
-            lambda: EcoServeSystem(cost, 8, slo, plus_plus=True),
-        "vLLM (NoDG)": lambda: VLLMSystem(cost, 8),
-        "Sarathi (NoDG+chunked)": lambda: SarathiSystem(cost, 8),
-        "DistServe (FuDG intra)":
-            lambda: DistServeSystem(cost, 8, prefill_ratio=0.25),
-        "MoonCake (FuDG inter)":
-            lambda: MoonCakeSystem(cost, 8, prefill_ratio=0.25),
+    scenario = make_scenario(args.scenario, args.workload, args.rate,
+                             seed=args.seed)
+    print(f"{args.model} x {args.workload} [{args.scenario}] @ "
+          f"{args.rate} req/s, 8 instances TP=4 on L20+10GbE "
+          f"(SLO: ttft={slo.ttft}s, tpot={slo.tpot*1e3:.0f}ms)\n")
+    labels = {
+        "ecoserve": "EcoServe (PaDG)",
+        "ecoserve++": "EcoServe++ (beyond-paper)",
+        "vllm": "vLLM (NoDG)",
+        "sarathi": "Sarathi (NoDG+chunked)",
+        "distserve": "DistServe (FuDG intra)",
+        "mooncake": "MoonCake (FuDG inter)",
     }
-    print(f"{args.model} x {args.workload} @ {args.rate} req/s, "
-          f"8 instances TP=4 on L20+10GbE (SLO: ttft={slo.ttft}s, "
-          f"tpot={slo.tpot*1e3:.0f}ms)\n")
     print(f"{'system':28}{'attainment':>11}{'ttft_p90':>10}{'tpot_p90':>10}")
-    for name, fac in systems.items():
-        m = run_once(fac, profile, args.rate, slo, duration=60.0)
-        print(f"{name:28}{m['attainment']:11.2f}"
+    for name, label in labels.items():
+        m = run_once(lambda: make_system(name, cost, 8, slo), scenario,
+                     args.rate, slo, duration=60.0, seed=args.seed)
+        print(f"{label:28}{m['attainment']:11.2f}"
               f"{m.get('ttft_p90', 0):10.2f}{m.get('tpot_p90', 0):10.3f}")
 
 

@@ -1,4 +1,52 @@
+"""Baseline serving systems + the uniform strategy factory.
+
+``make_system`` is the single construction point for every
+``ServingSystem`` variant (EcoServe/PaDG included) so the experiment
+runner, benchmarks, and tests build them identically.
+"""
+from typing import Callable, Dict, Tuple
+
 from repro.baselines.nodg_vllm import VLLMSystem          # noqa: F401
 from repro.baselines.nodg_sarathi import SarathiSystem    # noqa: F401
 from repro.baselines.fudg_distserve import DistServeSystem  # noqa: F401
 from repro.baselines.fudg_mooncake import MoonCakeSystem  # noqa: F401
+
+
+def _ecoserve(cost, n, slo, **kw):
+    from repro.core.padg_system import EcoServeSystem
+    return EcoServeSystem(cost, n, slo, **kw)
+
+
+def _ecoserve_pp(cost, n, slo, **kw):
+    from repro.core.padg_system import EcoServeSystem
+    return EcoServeSystem(cost, n, slo, plus_plus=True, **kw)
+
+
+_REGISTRY: Dict[str, Callable] = {
+    # PaDG (the paper's system) and the beyond-paper admission variant
+    "ecoserve": _ecoserve,
+    "ecoserve++": _ecoserve_pp,
+    # NoDG baselines (paper §4.1 baselines 1-2)
+    "vllm": VLLMSystem,
+    "sarathi": SarathiSystem,
+    # FuDG baselines (paper §4.1 baselines 3-4)
+    "distserve": DistServeSystem,
+    "mooncake": MoonCakeSystem,
+}
+
+# default constructor kwargs matching the paper's Fig. 8 deployment
+DEFAULT_KWARGS: Dict[str, Dict] = {
+    "distserve": {"prefill_ratio": 0.25},
+    "mooncake": {"prefill_ratio": 0.25},
+}
+
+STRATEGIES: Tuple[str, ...] = tuple(_REGISTRY)
+
+
+def make_system(name: str, cost, n_instances: int, slo=None, **kw):
+    """Construct a serving system by strategy name."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown strategy {name!r}; "
+                       f"expected one of {STRATEGIES}")
+    merged = {**DEFAULT_KWARGS.get(name, {}), **kw}
+    return _REGISTRY[name](cost, n_instances, slo, **merged)

@@ -2,3 +2,6 @@ from repro.simulator.cost_model import (  # noqa: F401
     GPU_L20, GPU_A800, TPU_V5E_SIM, HardwareProfile, InstanceCostModel)
 from repro.simulator.workload import WORKLOADS, WorkloadGen  # noqa: F401
 from repro.simulator.engine import SimulationEngine          # noqa: F401
+from repro.simulator.scenarios import (  # noqa: F401
+    SCENARIO_KINDS, Scenario, TraceReplay, make_scenario, write_trace)
+from repro.simulator.runner import ExperimentRunner          # noqa: F401

@@ -9,13 +9,34 @@ from repro.simulator.engine import SimulationEngine
 from repro.simulator.workload import WorkloadGen, WorkloadProfile
 
 
-def run_once(system_factory: Callable[[], object], profile: WorkloadProfile,
+def as_scenario(workload, rate: float, seed: int):
+    """Normalize the workload argument to something with ``generate``.
+
+    Accepts a ``WorkloadProfile`` (wrapped in a Poisson ``WorkloadGen`` at
+    ``rate`` — the original behaviour), any scenario object exposing
+    ``generate(duration)`` (see ``repro.simulator.scenarios``), or a
+    factory callable ``(rate, seed) -> scenario`` for rate sweeps over
+    non-stationary shapes.
+    """
+    if isinstance(workload, WorkloadProfile):
+        return WorkloadGen(workload, rate, seed=seed)
+    if hasattr(workload, "generate"):
+        return workload
+    if callable(workload):
+        return workload(rate, seed)
+    raise TypeError(f"cannot build a scenario from {type(workload)!r}")
+
+
+def run_once(system_factory: Callable[[], object], workload,
              rate: float, slo: SLO, duration: float = 240.0,
              warmup: float = None, seed: int = 0) -> Dict[str, float]:
     system = system_factory()
     warmup = duration * 0.15 if warmup is None else min(warmup,
                                                         duration * 0.5)
-    gen = WorkloadGen(profile, rate, seed=seed)
+    gen = as_scenario(workload, rate, seed)
+    # a prebuilt scenario carries its own rate; report that one so a
+    # mismatched ``rate`` argument can't mislabel the result row
+    rate = getattr(getattr(gen, "arrivals", None), "rate", rate)
     reqs = gen.generate(duration)
     engine = SimulationEngine(system)
     # allow in-flight work to drain past the arrival window
@@ -33,15 +54,23 @@ def run_once(system_factory: Callable[[], object], profile: WorkloadProfile,
     return out
 
 
-def goodput(system_factory, profile, slo, target_attainment: float,
+def goodput(system_factory, workload, slo, target_attainment: float,
             lo: float = 0.05, hi: float = 64.0, tol: float = 0.10,
             duration: float = 240.0, seed: int = 0) -> Dict[str, float]:
     """Binary search for the highest rate with attainment >= target.
     Unfinished requests count against attainment via the completion factor.
+    ``workload`` is a ``WorkloadProfile`` or a ``(rate, seed) -> scenario``
+    factory (a fixed scenario has no rate knob to search over).
     Returns {goodput, attainment_at_goodput, ...}."""
+    if not isinstance(workload, WorkloadProfile) and \
+            hasattr(workload, "generate"):
+        raise TypeError(
+            "goodput() searches over request rates, but a fixed scenario "
+            "object ignores the probed rate; pass a WorkloadProfile or a "
+            "(rate, seed) -> scenario factory instead")
 
     def ok(rate: float) -> bool:
-        m = run_once(system_factory, profile, rate, slo,
+        m = run_once(system_factory, workload, rate, slo,
                      duration=duration, seed=seed)
         return m["attainment"] * min(1.0, m["completion"] + 1e-9) \
             >= target_attainment
@@ -55,7 +84,7 @@ def goodput(system_factory, profile, slo, target_attainment: float,
             lo = mid
         else:
             hi = mid
-    final = run_once(system_factory, profile, lo, slo,
+    final = run_once(system_factory, workload, lo, slo,
                      duration=duration, seed=seed + 1)
     return {"goodput": lo, "target": target_attainment,
             "attainment": final["attainment"], **{

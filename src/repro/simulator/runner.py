@@ -1,0 +1,158 @@
+"""Unified experiment runner: strategy x scenario x rate sweeps.
+
+``ExperimentRunner`` fans the cross product of serving strategies
+(EcoServe/PaDG, vLLM-NoDG, Sarathi-NoDG, DistServe-FuDG, MoonCake-FuDG),
+arrival scenarios (``repro.simulator.scenarios``), and request rates over
+a ``multiprocessing`` pool.  Every cell derives its own RNG seed from
+(base_seed, strategy, scenario, rate) via CRC32 — not Python's ``hash``,
+which is salted per process — so the result grid is bit-exactly
+reproducible regardless of worker count or scheduling order.  The grid
+feeds ``benchmarks/bench_scenarios.py`` and the golden regression test in
+``tests/test_scenarios.py``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import multiprocessing
+import zlib
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs import get_config
+from repro.core.slo import DATASET_SLOS
+from repro.simulator.cost_model import (GPU_A800, GPU_L20, TPU_V5E_SIM,
+                                        InstanceCostModel)
+from repro.simulator.metrics import run_once
+from repro.simulator.scenarios import SCENARIO_KINDS, make_scenario
+
+HARDWARE = {"L20": GPU_L20, "A800": GPU_A800, "tpu-v5e": TPU_V5E_SIM}
+
+# metrics kept in the persisted grid (attainment + tail latency summary)
+SUMMARY_KEYS = ("attainment", "completion", "finished",
+                "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
+
+
+def cell_seed(base_seed: int, strategy: str, scenario: str,
+              rate: float) -> int:
+    """Deterministic per-cell seed, stable across processes and runs."""
+    key = f"{strategy}|{scenario}|{rate:.6f}".encode()
+    return (zlib.crc32(key) ^ (base_seed * 2654435761)) & 0x7FFFFFFF
+
+
+def _run_cell(spec: Dict) -> Dict:
+    """Worker entry point: one (strategy, scenario, rate) simulation."""
+    # imported here (not module level): repro.baselines pulls in the
+    # system classes, which import repro.simulator — a cycle at load time
+    from repro.baselines import make_system
+    cost = InstanceCostModel(cfg=get_config(spec["model"]),
+                             hw=HARDWARE[spec["hw"]],
+                             tp=spec["tp"], pp=spec["pp"])
+    slo = DATASET_SLOS[spec["workload"]]
+    scenario = make_scenario(spec["scenario"], spec["workload"],
+                             spec["rate"], seed=spec["seed"])
+
+    def factory():
+        return make_system(spec["strategy"], cost, spec["n_instances"], slo)
+
+    metrics = run_once(factory, scenario, spec["rate"], slo,
+                       duration=spec["duration"], warmup=spec["warmup"],
+                       seed=spec["seed"])
+    summary = {k: metrics[k] for k in SUMMARY_KEYS if k in metrics}
+    return {**spec, "metrics": summary}
+
+
+@dataclasses.dataclass
+class ExperimentRunner:
+    """Sweeps strategies x scenarios x rates into a tidy result grid."""
+
+    strategies: Optional[Sequence[str]] = None   # None: every registered one
+    scenarios: Sequence[str] = tuple(
+        k for k in SCENARIO_KINDS if k != "ramp")
+    rates: Sequence[float] = (8.0,)
+    model: str = "llama-30b"
+    hw: str = "L20"
+    tp: int = 4
+    pp: int = 1
+    n_instances: int = 8
+    workload: str = "sharegpt"
+    duration: float = 60.0
+    warmup: Optional[float] = None
+    base_seed: int = 0
+    n_workers: Optional[int] = None   # None: one per core, capped by cells
+
+    def __post_init__(self):
+        if self.strategies is None:
+            from repro.baselines import STRATEGIES
+            self.strategies = STRATEGIES
+
+    def cells(self) -> List[Dict]:
+        common = dict(model=self.model, hw=self.hw, tp=self.tp, pp=self.pp,
+                      n_instances=self.n_instances, workload=self.workload,
+                      duration=self.duration, warmup=self.warmup)
+        out = []
+        for strat in self.strategies:
+            for scen in self.scenarios:
+                for rate in self.rates:
+                    out.append({**common, "strategy": strat,
+                                "scenario": scen, "rate": rate,
+                                "seed": cell_seed(self.base_seed, strat,
+                                                  scen, rate)})
+        return out
+
+    def run(self) -> Dict:
+        specs = self.cells()
+        workers = self.n_workers
+        if workers is None:
+            workers = min(len(specs), multiprocessing.cpu_count())
+        if workers > 1:
+            # spawn, not fork: the parent may have imported jax (pytest,
+            # notebooks), and forking a multithreaded process can deadlock
+            ctx = multiprocessing.get_context("spawn")
+            with ctx.Pool(workers) as pool:
+                rows = pool.map(_run_cell, specs)
+        else:
+            rows = [_run_cell(s) for s in specs]
+        meta = dataclasses.asdict(self)
+        meta.pop("n_workers")        # parallelism does not affect results
+        meta["strategies"] = list(self.strategies)
+        meta["scenarios"] = list(self.scenarios)
+        meta["rates"] = list(self.rates)
+        return {"meta": meta, "cells": rows}
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def grid(results: Dict) -> Dict[str, Dict[str, Dict[float, Dict]]]:
+        """Pivot the flat cell list to [strategy][scenario][rate]."""
+        out: Dict[str, Dict[str, Dict[float, Dict]]] = {}
+        for cell in results["cells"]:
+            out.setdefault(cell["strategy"], {}) \
+               .setdefault(cell["scenario"], {})[cell["rate"]] = \
+               cell["metrics"]
+        return out
+
+    @staticmethod
+    def save(results: Dict, path) -> None:
+        with open(path, "w") as f:
+            json.dump(results, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    @staticmethod
+    def load(path) -> Dict:
+        with open(path) as f:
+            return json.load(f)
+
+
+# --------------------------------------------------------------------- #
+# The canonical regression grid: small enough to run in CI, wide enough
+# to pin every strategy x scenario pair.  bench_scenarios --write-golden
+# regenerates tests/golden/scenario_grid.json from exactly this spec.
+# --------------------------------------------------------------------- #
+
+def regression_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
+    return ExperimentRunner(
+        strategies=("ecoserve", "vllm", "sarathi", "distserve", "mooncake"),
+        scenarios=("poisson", "bursty", "diurnal", "replay"),
+        rates=(6.0,),
+        model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
+        workload="sharegpt", duration=20.0, warmup=3.0,
+        base_seed=42, n_workers=n_workers)

@@ -1,0 +1,273 @@
+"""Composable trace-driven arrival scenarios.
+
+The stationary-Poisson generator in ``workload.py`` exercises the paper's
+goodput claim under exactly one traffic shape; DistServe and DynaServe
+both evaluate under bursty and shifting load because disaggregation
+trade-offs invert there.  A ``Scenario`` pairs an ``ArrivalProcess``
+(stationary Poisson, MMPP-style bursty, diurnal sinusoid, linear ramp)
+with a ``WorkloadProfile``'s length distributions; everything draws from
+one ``np.random.default_rng`` stream so a (scenario, seed, duration)
+triple is bit-exactly reproducible.
+
+Any generated workload can be frozen to a JSONL trace (one
+``{"arrival_time", "prompt_len", "output_len"}`` record per line) with
+``write_trace`` and replayed with ``TraceReplay`` — JSON round-trips
+Python floats exactly, so replay reproduces the original ``Request``
+stream bit-for-bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Callable, Iterable, List, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.request import Request
+from repro.simulator.workload import (WORKLOADS, WorkloadProfile,
+                                      poisson_arrival_times)
+
+# --------------------------------------------------------------------- #
+# arrival processes
+# --------------------------------------------------------------------- #
+
+
+def _thinned_times(rng: np.random.Generator, duration: float, peak: float,
+                   rate_fn: Callable[[float], float]) -> np.ndarray:
+    """Non-homogeneous Poisson process via Lewis-Shedler thinning."""
+    out: List[float] = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / peak)
+        if t >= duration:
+            break
+        if rng.random() * peak <= rate_fn(t):
+            out.append(t)
+    return np.asarray(out, dtype=float)
+
+
+class ArrivalProcess:
+    """Seeded arrival-time sampler; ``rate`` is the time-averaged rate."""
+
+    rate: float
+
+    def sample(self, rng: np.random.Generator,
+               duration: float) -> np.ndarray:
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonArrivals(ArrivalProcess):
+    """Stationary Poisson at ``rate`` req/s (the seed repo's only shape)."""
+    rate: float
+
+    def sample(self, rng, duration):
+        return poisson_arrival_times(rng, self.rate, duration)
+
+
+@dataclasses.dataclass(frozen=True)
+class BurstyArrivals(ArrivalProcess):
+    """MMPP-style bursty arrivals: exponential low/high phases alternate;
+    the high-phase rate is ``burst`` x the low-phase rate, with phase
+    durations chosen so the time-averaged rate stays ``rate``."""
+    rate: float
+    burst: float = 4.0        # high-phase rate multiplier over low phase
+    phase_low: float = 12.0   # mean seconds spent in the low phase
+    phase_high: float = 3.0   # mean seconds spent in the high phase
+
+    def sample(self, rng, duration):
+        r_low = self.rate * (self.phase_low + self.phase_high) / (
+            self.phase_low + self.burst * self.phase_high)
+        r_high = self.burst * r_low
+        pieces: List[np.ndarray] = []
+        t, high = 0.0, False
+        while t < duration:
+            mean_len = self.phase_high if high else self.phase_low
+            length = rng.exponential(mean_len)
+            end = min(t + length, duration)
+            r = r_high if high else r_low
+            n = rng.poisson(r * (end - t))
+            if n:
+                pieces.append(t + np.sort(rng.random(n)) * (end - t))
+            t += length
+            high = not high
+        if not pieces:
+            return np.empty(0)
+        return np.concatenate(pieces)
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalArrivals(ArrivalProcess):
+    """Sinusoidal rate modulation: rate(t) = rate * (1 + A sin(2pi t/T))."""
+    rate: float
+    amplitude: float = 0.6    # in (0, 1]: peak = rate * (1 + amplitude)
+    period: float = 120.0     # seconds per day-cycle (compressed)
+    phase: float = 0.0
+
+    def sample(self, rng, duration):
+        peak = self.rate * (1.0 + self.amplitude)
+
+        def rate_fn(t: float) -> float:
+            return self.rate * (1.0 + self.amplitude * math.sin(
+                2.0 * math.pi * (t + self.phase) / self.period))
+
+        return _thinned_times(rng, duration, peak, rate_fn)
+
+
+@dataclasses.dataclass(frozen=True)
+class RampArrivals(ArrivalProcess):
+    """Linear ramp from ``lo_frac*rate`` to ``hi_frac*rate`` over the
+    horizon; defaults keep the time-averaged rate at ``rate``."""
+    rate: float
+    lo_frac: float = 0.25
+    hi_frac: float = 1.75
+
+    def sample(self, rng, duration):
+        lo = self.lo_frac * self.rate
+        hi = self.hi_frac * self.rate
+        peak = max(lo, hi)
+
+        def rate_fn(t: float) -> float:
+            return lo + (hi - lo) * (t / duration)
+
+        return _thinned_times(rng, duration, peak, rate_fn)
+
+
+# --------------------------------------------------------------------- #
+# scenarios
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A reproducible workload: arrival process x length distributions."""
+    name: str
+    profile: WorkloadProfile
+    arrivals: ArrivalProcess
+    seed: int = 0
+
+    def generate(self, duration: float) -> List[Request]:
+        rng = np.random.default_rng(self.seed)
+        times = self.arrivals.sample(rng, duration)
+        n = len(times)
+        ins = self.profile.input_dist.sample(rng, n)
+        outs = self.profile.output_dist.sample(rng, n)
+        return [
+            Request(rid=i, arrival_time=float(times[i]),
+                    prompt_len=int(ins[i]), output_len=int(outs[i]))
+            for i in range(n)
+        ]
+
+
+# --------------------------------------------------------------------- #
+# JSONL traces
+# --------------------------------------------------------------------- #
+
+TraceRecord = Tuple[float, int, int]   # (arrival_time, prompt_len, output_len)
+
+
+def trace_lines(reqs: Iterable[Request]) -> List[str]:
+    return [
+        json.dumps({"arrival_time": r.arrival_time,
+                    "prompt_len": r.prompt_len,
+                    "output_len": r.output_len})
+        for r in reqs
+    ]
+
+
+def write_trace(reqs: Iterable[Request], path) -> None:
+    """Freeze any generated workload to a JSONL trace file."""
+    with open(path, "w") as f:
+        for line in trace_lines(reqs):
+            f.write(line + "\n")
+
+
+def _parse_trace(lines: Iterable[str]) -> Tuple[TraceRecord, ...]:
+    records: List[TraceRecord] = []
+    for line in lines:
+        line = line.strip()
+        if not line:
+            continue
+        d = json.loads(line)
+        records.append((float(d["arrival_time"]), int(d["prompt_len"]),
+                        int(d["output_len"])))
+    return tuple(records)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceReplay:
+    """Replays a frozen trace; arrivals past ``duration`` are dropped so a
+    long trace can drive a short experiment."""
+    name: str
+    records: Tuple[TraceRecord, ...]
+
+    def generate(self, duration: float = None) -> List[Request]:
+        reqs: List[Request] = []
+        for i, (t, plen, olen) in enumerate(self.records):
+            if duration is not None and t >= duration:
+                continue
+            reqs.append(Request(rid=i, arrival_time=t, prompt_len=plen,
+                                output_len=olen))
+        return reqs
+
+    @staticmethod
+    def from_requests(name: str, reqs: Sequence[Request]) -> "TraceReplay":
+        return TraceReplay(name, _parse_trace(trace_lines(reqs)))
+
+    @staticmethod
+    def from_jsonl(path, name: str = None) -> "TraceReplay":
+        with open(path) as f:
+            records = _parse_trace(f)
+        return TraceReplay(name or f"replay:{path}", records)
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundTripReplay:
+    """Generates a base scenario, freezes it through the JSONL codec, and
+    replays the frozen form — the runner's default trace-replay cell, so
+    every sweep exercises the serialize -> replay path end to end."""
+    base: Scenario
+    name: str = "replay"
+
+    def generate(self, duration: float) -> List[Request]:
+        frozen = trace_lines(self.base.generate(duration))
+        return TraceReplay(self.name, _parse_trace(frozen)).generate(duration)
+
+
+# --------------------------------------------------------------------- #
+# factory
+# --------------------------------------------------------------------- #
+
+SCENARIO_KINDS = ("poisson", "bursty", "diurnal", "ramp", "replay")
+
+
+def make_scenario(kind: str, profile: Union[str, WorkloadProfile],
+                  rate: float, seed: int = 0, **kw):
+    """Build a scenario by kind at a time-averaged ``rate``.
+
+    ``kind='replay'`` replays ``kw['trace']`` (a JSONL path) if given,
+    else round-trips a Poisson workload through the trace codec.
+    """
+    if isinstance(profile, str):
+        profile = WORKLOADS[profile]
+    if kind == "poisson":
+        if kw:
+            raise TypeError(f"poisson takes no extra options, got {kw}")
+        return Scenario(kind, profile, PoissonArrivals(rate), seed)
+    if kind == "bursty":
+        return Scenario(kind, profile, BurstyArrivals(rate, **kw), seed)
+    if kind == "diurnal":
+        return Scenario(kind, profile, DiurnalArrivals(rate, **kw), seed)
+    if kind == "ramp":
+        return Scenario(kind, profile, RampArrivals(rate, **kw), seed)
+    if kind == "replay":
+        trace = kw.pop("trace", None)
+        if kw:
+            raise TypeError(f"replay takes only 'trace', got {kw}")
+        if trace is not None:
+            return TraceReplay.from_jsonl(trace)
+        base = Scenario("replay-base", profile, PoissonArrivals(rate), seed)
+        return RoundTripReplay(base)
+    raise KeyError(f"unknown scenario kind {kind!r}; "
+                   f"expected one of {SCENARIO_KINDS}")

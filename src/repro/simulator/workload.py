@@ -15,6 +15,23 @@ import numpy as np
 from repro.core.request import Request
 
 
+def poisson_arrival_times(rng: np.random.Generator, rate: float,
+                          duration: float) -> np.ndarray:
+    """Homogeneous Poisson arrival times on [0, duration).
+
+    Draws exponential gaps in chunks until the cumulative time crosses
+    ``duration`` — a single pre-sized draw silently truncates arrivals at
+    long horizons whenever the sampled gaps run short.
+    """
+    chunk = int(rate * duration * 1.5) + 16
+    gaps = rng.exponential(1.0 / rate, size=chunk)
+    times = np.cumsum(gaps)
+    while times[-1] < duration:
+        gaps = rng.exponential(1.0 / rate, size=chunk)
+        times = np.concatenate([times, times[-1] + np.cumsum(gaps)])
+    return times[times < duration]
+
+
 def _lognormal_params(mean: float, median: float):
     mu = math.log(median)
     sigma2 = 2.0 * math.log(mean / median)
@@ -69,10 +86,7 @@ class WorkloadGen:
 
     def generate(self, duration: float) -> List[Request]:
         """Poisson arrivals over [0, duration)."""
-        n_expected = int(self.rate * duration * 1.5) + 16
-        gaps = self.rng.exponential(1.0 / self.rate, size=n_expected)
-        times = np.cumsum(gaps)
-        times = times[times < duration]
+        times = poisson_arrival_times(self.rng, self.rate, duration)
         n = len(times)
         ins = self.profile.input_dist.sample(self.rng, n)
         outs = self.profile.output_dist.sample(self.rng, n)

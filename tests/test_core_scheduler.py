@@ -135,3 +135,68 @@ def test_sticky_routing_prefers_last_instance():
     a = macro.route(req(1, plen=100), 0.0)
     b = macro.route(req(2, plen=100), 0.0)
     assert a.iid == b.iid  # Algorithm 1 line 2: same instance first
+
+
+def test_route_moves_sticky_pointer_to_admitting_instance():
+    """After a cyclic hand-off the pointer stays on the new instance, so
+    the next request does NOT re-probe the saturated one."""
+    instances = [make_instance(i) for i in range(3)]
+    macro = MacroInstance(0, instances, SLO_T, _pred)
+    for i in range(2):                       # saturate instance 0 (~0.8s)
+        assert macro.route(req(i, plen=4000), 0.0).iid == 0
+    moved = macro.route(req(10, plen=4000), 0.0)
+    assert moved.iid == 1
+    assert macro._active_idx == 1
+    again = macro.route(req(11, plen=100), 0.0)
+    assert again.iid == 1                    # sticky on the new instance
+
+
+def test_route_wraps_cyclically_from_nonzero_pointer():
+    """The probe order is (active, active+1, ...) mod n — instance 0 is
+    still reachable once the pointer has moved past it."""
+    instances = [make_instance(i) for i in range(3)]
+    macro = MacroInstance(0, instances, SLO_T, _pred)
+    macro._active_idx = 2
+    for i in range(2):                       # saturate instance 2
+        assert macro.route(req(i, plen=4000), 0.0).iid == 2
+    wrapped = macro.route(req(10, plen=4000), 0.0)
+    assert wrapped.iid == 0                  # (2+1) % 3
+    assert macro._active_idx == 0
+
+
+def test_remove_instance_keeps_active_idx_in_range():
+    instances = [make_instance(i) for i in range(3)]
+    macro = MacroInstance(0, instances, SLO_T, _pred)
+    macro._active_idx = 2
+    removed = macro.remove_instance()
+    assert removed is not None
+    assert 0 <= macro._active_idx < macro.size
+    assert macro.route(req(1, plen=100), 0.0) is not None
+    # shrink to empty: routing degrades gracefully, no IndexError
+    macro.remove_instance()
+    macro.remove_instance()
+    assert macro.size == 0
+    assert macro.remove_instance() is None
+    assert macro.route(req(2, plen=100), 0.0) is None
+
+
+def test_remove_instance_picks_emptiest():
+    instances = [make_instance(i) for i in range(3)]
+    macro = MacroInstance(0, instances, SLO_T, _pred)
+    instances[0].admit(req(1, plen=500), 0.0)
+    instances[2].admit(req(2, plen=300), 0.0)
+    removed = macro.remove_instance()
+    assert removed.iid == 1                  # zero KV tokens in flight
+
+
+def test_route_forced_picks_max_free_kv():
+    instances = [make_instance(0, cap=1_000), make_instance(1, cap=5_000),
+                 make_instance(2, cap=2_000)]
+    macro = MacroInstance(0, instances, SLO_T, _pred)
+    # load the largest instance so free KV (capacity - used), not raw
+    # capacity, decides: free = [1000, 5000-4200=800, 2000]
+    instances[1].admit(req(1, plen=4200), 0.0)
+    forced = macro.route_forced(req(9, plen=100), 0.0)
+    assert forced.iid == 2
+    assert macro.rejected == 1
+    assert macro._active_idx == 2            # forced admission re-sticks

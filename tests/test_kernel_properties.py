@@ -3,7 +3,12 @@ random shapes/block sizes must match the oracles, and the serving-path
 invariant (decode-over-cache == last prefill row) must hold."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention

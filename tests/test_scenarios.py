@@ -1,0 +1,158 @@
+"""Deterministic regression layer for the scenario subsystem.
+
+The golden grid pins every strategy x scenario cell's summary metrics
+bit-exactly under fixed per-cell seeds; any behavioural change to the
+simulator, schedulers, or workload generation shows up here first.
+Regenerate the fixture (after an *intentional* change) with:
+
+    PYTHONPATH=src python -m benchmarks.bench_scenarios --write-golden
+"""
+import functools
+import json
+import pathlib
+
+import pytest
+
+from repro.baselines import STRATEGIES, make_system
+from repro.configs import get_config
+from repro.core.slo import DATASET_SLOS
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.simulator.metrics import goodput, run_once
+from repro.simulator.runner import (ExperimentRunner, cell_seed,
+                                    regression_runner)
+from repro.simulator.scenarios import (SCENARIO_KINDS, TraceReplay,
+                                       make_scenario, write_trace)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "scenario_grid.json"
+
+
+# --------------------------------------------------------------------- #
+# golden-metrics regression
+# --------------------------------------------------------------------- #
+def test_golden_grid_reproduced_bit_exactly():
+    golden = ExperimentRunner.load(GOLDEN)
+    fresh = regression_runner(n_workers=2).run()
+    assert fresh["meta"] == golden["meta"], \
+        "regression grid spec drifted from the golden fixture"
+    want = json.dumps(golden["cells"], sort_keys=True)
+    got = json.dumps(fresh["cells"], sort_keys=True)
+    assert got == want, (
+        "scenario grid no longer reproduces the golden metrics; if the "
+        "change is intentional, regenerate with `python -m "
+        "benchmarks.bench_scenarios --write-golden` and review the diff")
+
+
+def test_golden_grid_covers_all_strategies_and_scenarios():
+    golden = ExperimentRunner.load(GOLDEN)
+    strategies = {c["strategy"] for c in golden["cells"]}
+    scenarios = {c["scenario"] for c in golden["cells"]}
+    assert strategies == {"ecoserve", "vllm", "sarathi", "distserve",
+                          "mooncake"}
+    assert scenarios == {"poisson", "bursty", "diurnal", "replay"}
+
+
+def test_cell_seed_is_stable_and_distinct():
+    # pinned values: cell_seed must never depend on PYTHONHASHSEED
+    assert cell_seed(42, "ecoserve", "poisson", 6.0) == \
+        cell_seed(42, "ecoserve", "poisson", 6.0)
+    seeds = {cell_seed(42, s, sc, 6.0)
+             for s in STRATEGIES for sc in SCENARIO_KINDS}
+    assert len(seeds) == len(STRATEGIES) * len(SCENARIO_KINDS)
+
+
+# --------------------------------------------------------------------- #
+# trace round-trip
+# --------------------------------------------------------------------- #
+def test_trace_round_trip_is_identical(tmp_path):
+    sc = make_scenario("bursty", "sharegpt", 6.0, seed=3)
+    reqs = sc.generate(60.0)
+    assert reqs, "bursty scenario generated no requests"
+    path = tmp_path / "trace.jsonl"
+    write_trace(reqs, path)
+    replay = TraceReplay.from_jsonl(path)
+    reqs2 = replay.generate(60.0)
+    assert [(r.rid, r.arrival_time, r.prompt_len, r.output_len)
+            for r in reqs] == \
+           [(r.rid, r.arrival_time, r.prompt_len, r.output_len)
+            for r in reqs2]
+
+
+def test_trace_replay_respects_duration(tmp_path):
+    sc = make_scenario("poisson", "alpaca", 8.0, seed=1)
+    path = tmp_path / "trace.jsonl"
+    write_trace(sc.generate(40.0), path)
+    replay = TraceReplay.from_jsonl(path)
+    short = replay.generate(10.0)
+    assert short and all(r.arrival_time < 10.0 for r in short)
+    assert len(short) < len(replay.generate(40.0))
+
+
+# --------------------------------------------------------------------- #
+# scenario generators
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("kind", SCENARIO_KINDS)
+def test_scenario_seeded_determinism(kind):
+    a = make_scenario(kind, "sharegpt", 8.0, seed=5).generate(30.0)
+    b = make_scenario(kind, "sharegpt", 8.0, seed=5).generate(30.0)
+    assert [(r.arrival_time, r.prompt_len, r.output_len) for r in a] == \
+           [(r.arrival_time, r.prompt_len, r.output_len) for r in b]
+    c = make_scenario(kind, "sharegpt", 8.0, seed=6).generate(30.0)
+    assert [(r.arrival_time, r.prompt_len, r.output_len) for r in a] != \
+           [(r.arrival_time, r.prompt_len, r.output_len) for r in c]
+
+
+@pytest.mark.parametrize("kind", SCENARIO_KINDS)
+def test_scenario_mean_rate_matches_nominal(kind):
+    """Every shape is rate-parameterized by its time-averaged rate."""
+    rate, duration = 10.0, 2400.0   # long horizon: bursty has high variance
+    n = len(make_scenario(kind, "alpaca", rate, seed=0).generate(duration))
+    assert n == pytest.approx(rate * duration, rel=0.10), kind
+
+
+def test_bursty_is_burstier_than_poisson():
+    """Index of dispersion over 5s bins: MMPP >> Poisson (~1)."""
+    import numpy as np
+
+    def dispersion(reqs, duration, bin_s=5.0):
+        counts, _ = np.histogram(
+            [r.arrival_time for r in reqs],
+            bins=int(duration / bin_s), range=(0, duration))
+        return counts.var() / counts.mean()
+
+    duration = 600.0
+    pois = make_scenario("poisson", "alpaca", 10.0, seed=2)
+    burst = make_scenario("bursty", "alpaca", 10.0, seed=2)
+    d_p = dispersion(pois.generate(duration), duration)
+    d_b = dispersion(burst.generate(duration), duration)
+    assert d_b > 2.0 * d_p, (d_p, d_b)
+
+
+# --------------------------------------------------------------------- #
+# metrics integration: run_once / goodput accept any workload form
+# --------------------------------------------------------------------- #
+COST = InstanceCostModel(cfg=get_config("llama-30b"), hw=GPU_L20, tp=4)
+SLO = DATASET_SLOS["sharegpt"]
+
+
+def test_run_once_accepts_scenario_object():
+    sc = make_scenario("diurnal", "sharegpt", 2.0, seed=0)
+    m = run_once(functools.partial(make_system, "ecoserve", COST, 4, SLO),
+                 sc, 2.0, SLO, duration=20.0, warmup=3.0)
+    assert m["completion"] > 0.9 and m["finished"] > 5
+
+
+def test_goodput_rejects_fixed_scenario():
+    """A fixed scenario ignores the probed rate — goodput must refuse it
+    rather than bisect a dead knob and report an arbitrary rate."""
+    sc = make_scenario("poisson", "sharegpt", 6.0)
+    with pytest.raises(TypeError, match="factory"):
+        goodput(functools.partial(make_system, "vllm", COST, 4, SLO),
+                sc, SLO, target_attainment=0.5, duration=10.0)
+
+
+def test_goodput_accepts_scenario_factory():
+    factory = functools.partial(make_scenario, "poisson", "sharegpt")
+    g = goodput(functools.partial(make_system, "vllm", COST, 4, SLO),
+                factory, SLO, target_attainment=0.5,
+                lo=0.5, hi=4.0, tol=0.5, duration=15.0)
+    assert g["goodput"] > 0.0
