@@ -12,10 +12,13 @@ from __future__ import annotations
 import pathlib
 import time
 
-from repro.simulator.runner import ExperimentRunner, regression_runner
+from repro.simulator.runner import (ExperimentRunner, goodput_runner,
+                                    regression_runner)
 
-GOLDEN_PATH = (pathlib.Path(__file__).resolve().parent.parent
-               / "tests" / "golden" / "scenario_grid.json")
+GOLDEN_DIR = (pathlib.Path(__file__).resolve().parent.parent
+              / "tests" / "golden")
+GOLDEN_PATH = GOLDEN_DIR / "scenario_grid.json"
+GOODPUT_GOLDEN_PATH = GOLDEN_DIR / "goodput_frontier.json"
 
 
 def run(quick: bool = True) -> dict:
@@ -38,6 +41,22 @@ def run(quick: bool = True) -> dict:
     return results
 
 
+def run_goodput() -> dict:
+    """The Fig. 8 goodput frontier: max rate meeting the SLO target,
+    binary-searched inside each worker, per strategy x traffic shape."""
+    t0 = time.time()
+    results = goodput_runner().run()
+    dt = time.time() - t0
+    print("strategy,scenario,goodput,attainment,probes")
+    for cell in results["cells"]:
+        m = cell.get("metrics", {})
+        print(f"{cell['strategy']},{cell['scenario']},"
+              f"{m.get('goodput', 0):.3f},{m.get('attainment', 0):.4f},"
+              f"{m.get('probes', 0):.0f}")
+    print(f"\n{len(results['cells'])} frontier cells in {dt:.1f}s")
+    return results
+
+
 def write_golden() -> None:
     results = regression_runner().run()
     GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
@@ -45,14 +64,30 @@ def write_golden() -> None:
     print(f"wrote {len(results['cells'])} cells to {GOLDEN_PATH}")
 
 
+def write_goodput_golden() -> None:
+    results = goodput_runner().run()
+    GOODPUT_GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    ExperimentRunner.save(results, GOODPUT_GOLDEN_PATH)
+    print(f"wrote {len(results['cells'])} cells to {GOODPUT_GOLDEN_PATH}")
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--goodput", action="store_true",
+                    help="run the goodput-frontier grid instead of the "
+                         "fixed-rate sweep")
     ap.add_argument("--write-golden", action="store_true",
                     help="regenerate tests/golden/scenario_grid.json")
+    ap.add_argument("--write-golden-goodput", action="store_true",
+                    help="regenerate tests/golden/goodput_frontier.json")
     args = ap.parse_args()
     if args.write_golden:
         write_golden()
+    elif args.write_golden_goodput:
+        write_goodput_golden()
+    elif args.goodput:
+        run_goodput()
     else:
         run(quick=not args.full)

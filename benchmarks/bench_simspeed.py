@@ -1,0 +1,156 @@
+"""Simulator hot-path speed harness: simulated-seconds per wall-second.
+
+Runs the canonical regression-grid spec (``regression_runner``) — or a
+single tier-1-sized smoke cell — single-threaded and in-process, and
+reports how many seconds of simulated cluster time one wall-clock second
+buys.  The measured workload is exactly the golden-grid spec, so the
+speed number tracks the same code path that ``tests/test_scenarios.py``
+pins bit-exactly: optimizations that move the golden metrics are caught
+there, optimizations that slow the simulator are caught here.
+
+    PYTHONPATH=src python -m benchmarks.bench_simspeed            # grid
+    PYTHONPATH=src python -m benchmarks.bench_simspeed --smoke    # CI gate
+    PYTHONPATH=src python -m benchmarks.bench_simspeed --write-baseline
+
+``--smoke`` compares one cell against the committed baseline in
+``benchmarks/BENCH_simspeed.json`` and exits non-zero when the measured
+speed regresses more than ``--max-regression`` (default 2x) — the CI
+workflow runs this on every push.  The baseline JSON also records a
+pure-Python *calibration* time measured on the machine that wrote it;
+``--smoke`` re-measures the calibration locally and scales the expected
+speed by the ratio, so the gate tracks the simulator's speed relative to
+the host's interpreter speed rather than absolute wall clock — a slow CI
+runner doesn't trip it, and a fast one doesn't mask regressions.
+``--write-baseline`` re-measures and rewrites the baseline JSON (do this
+after an intentional perf change, and commit the diff).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import platform
+import sys
+import time
+
+from repro.simulator.runner import _run_cell, regression_runner
+
+BASELINE_PATH = pathlib.Path(__file__).resolve().parent / \
+    "BENCH_simspeed.json"
+
+
+def _calibration(repeats: int = 3) -> float:
+    """Seconds for a fixed pure-Python workload (dict/heap/float churn,
+    the same primitive mix as the event loop) — the host-speed yardstick
+    that makes the committed baseline portable across machines."""
+    import heapq
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        heap, acc, d = [], 0.0, {}
+        for i in range(200_000):
+            heapq.heappush(heap, ((i * 2654435761) % 1_000_003, i))
+            acc += i * 1e-9
+            d[i & 1023] = acc
+            if i & 1:
+                heapq.heappop(heap)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _smoke_spec() -> dict:
+    """One tier-1-sized cell: the golden grid's ecoserve/poisson corner."""
+    for spec in regression_runner(n_workers=1).cells():
+        if spec["strategy"] == "ecoserve" and spec["scenario"] == "poisson":
+            return spec
+    raise RuntimeError("regression grid lost its ecoserve/poisson cell")
+
+
+def measure(specs, repeats: int = 1) -> dict:
+    """Best-of-``repeats`` simulated-seconds-per-wall-second over specs."""
+    sim_seconds = sum(s["duration"] for s in specs)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for spec in specs:
+            _run_cell(spec)
+        best = min(best, time.perf_counter() - t0)
+    return {
+        "cells": len(specs),
+        "sim_seconds": sim_seconds,
+        "wall_seconds": round(best, 4),
+        "sim_s_per_wall_s": round(sim_seconds / best, 2),
+    }
+
+
+def run_grid(repeats: int) -> dict:
+    return measure(regression_runner(n_workers=1).cells(), repeats)
+
+
+def run_smoke(repeats: int) -> dict:
+    return measure([_smoke_spec()], repeats)
+
+
+def write_baseline(repeats: int) -> None:
+    result = {
+        "host": {"machine": platform.machine(),
+                 "python": platform.python_version()},
+        "calibration_seconds": round(_calibration(), 4),
+        "smoke": run_smoke(repeats),
+        "grid": run_grid(repeats),
+    }
+    BASELINE_PATH.write_text(json.dumps(result, indent=1, sort_keys=True)
+                             + "\n")
+    print(f"wrote {BASELINE_PATH}")
+    print(json.dumps(result, indent=1, sort_keys=True))
+
+
+def check_smoke(max_regression: float, repeats: int) -> int:
+    if not BASELINE_PATH.exists():
+        print(f"no baseline at {BASELINE_PATH}; run --write-baseline first",
+              file=sys.stderr)
+        return 2
+    baseline = json.loads(BASELINE_PATH.read_text())
+    # normalize for host speed: on a machine whose interpreter runs the
+    # calibration workload k-x slower than the baseline machine, the
+    # simulator is expected to run k-x slower too
+    base_calib = baseline.get("calibration_seconds")
+    host_factor = _calibration() / base_calib if base_calib else 1.0
+    expected = baseline["smoke"]["sim_s_per_wall_s"] / host_factor
+    now = run_smoke(repeats)
+    ratio = expected / max(1e-9, now["sim_s_per_wall_s"])
+    print(f"baseline: {baseline['smoke']['sim_s_per_wall_s']:.1f} "
+          f"sim-s/wall-s, host-adjusted expectation: {expected:.1f} "
+          f"(host x{host_factor:.2f}), now: {now['sim_s_per_wall_s']:.1f} "
+          f"(slowdown x{ratio:.2f}, limit x{max_regression:.2f})")
+    if ratio > max_regression:
+        print("FAIL: simulator smoke cell regressed beyond the limit",
+              file=sys.stderr)
+        return 1
+    print("OK")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tier-1-sized cell vs the committed baseline")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help=f"re-measure and rewrite {BASELINE_PATH.name}")
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="--smoke fails beyond this slowdown factor")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="best-of-N timing repeats")
+    args = ap.parse_args(argv)
+    if args.write_baseline:
+        write_baseline(args.repeats)
+        return 0
+    if args.smoke:
+        return check_smoke(args.max_regression, args.repeats)
+    result = run_grid(args.repeats)
+    print(json.dumps(result, indent=1, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

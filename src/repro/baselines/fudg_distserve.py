@@ -51,8 +51,7 @@ class DistServeSystem:
     # ------------------------------------------------------------------ #
     def submit(self, req: Request, now: float,
                engine: SimulationEngine) -> None:
-        inst = min(self.prefill_insts,
-                   key=lambda i: sum(r.prompt_len for r in i.pending))
+        inst = min(self.prefill_insts, key=lambda i: i.pending_tokens)
         inst.admit(req, now)
         engine.activate(inst)
 
@@ -73,7 +72,7 @@ class DistServeSystem:
                     r.finish_time = engine.now
                     engine.finished.append(r)
                     return
-                target.decoding.append(r)
+                target.add_decoding(r)
                 engine.activate(target)
 
             engine.push(done_t, deliver)

@@ -40,9 +40,8 @@ class SarathiInstance(Instance):
                 chunks.append((r, take, done))
                 budget -= take
         decode_batch = self.decoding[: self.max_decode_batch]
-        dur = self.executor.hybrid_time(
-            [c[1] for c in chunks], [c[2] for c in chunks],
-            len(decode_batch), [r.kv_tokens() for r in decode_batch])
+        dur = self._hybrid_iter_time(
+            [c[1] for c in chunks], [c[2] for c in chunks], decode_batch)
         self.phase = "hybrid"
         self._current_chunks = chunks
         return "hybrid", dur, decode_batch
@@ -53,20 +52,21 @@ class SarathiInstance(Instance):
             return super().complete_slot(kind, reqs, t_end)
         # decode side
         for r in reqs:
-            r.tokens_generated += 1
+            self._gen_token(r)
             if r.tokens_generated == 2:
                 r.second_token_time = t_end
             if r.tokens_generated >= r.output_len:
                 r.state = RequestState.FINISHED
                 r.finish_time = t_end
-                self.decoding.remove(r)
+                self.remove_decoding(r)
                 finished.append(r)
+        self._touch()
         # prefill chunks
         for r, take, done in self._current_chunks:
             new_done = done + take
             self._progress[r.rid] = new_done
             if new_done >= r.prompt_len:
-                self.pending.remove(r)
+                self.remove_pending(r)
                 del self._progress[r.rid]
                 r.first_token_time = t_end
                 r.tokens_generated = 1
@@ -76,7 +76,7 @@ class SarathiInstance(Instance):
                     finished.append(r)
                 else:
                     r.state = RequestState.DECODING
-                    self.decoding.append(r)
+                    self.add_decoding(r)
         self._current_chunks = []
         self._finished.extend(finished)
         return finished

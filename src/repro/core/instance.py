@@ -11,11 +11,21 @@ real-exec engine).  Scheduling policy (PaDG intra-instance rule):
   * each slot is an uninterruptible unit of work (phase switches happen
     only at slot boundaries, which is what makes the disaggregation
     *temporal*).
+
+Hot-path accounting is incremental: the instance maintains running
+aggregates (pending prefill tokens, decode KV/context sums) that are
+updated in O(1) on every admit/complete/hand-off instead of re-summing
+``self.pending``/``self.decoding`` at each slot boundary.  All membership
+changes MUST therefore go through the mutator methods below
+(``admit``/``remove_pending``/``add_decoding``/``remove_decoding``/
+``sync_tokens``/``handoff_prefilled``) — never mutate the lists directly.
+Every mutator bumps ``_version``, which invalidates the status cache and
+the cached next-prefill-batch plan.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Protocol, Tuple
+from typing import List, Optional, Protocol, Tuple
 
 from repro.core.request import Request, RequestState
 
@@ -23,6 +33,10 @@ from repro.core.request import Request, RequestState
 class ExecutorModel(Protocol):
     def prefill_time(self, prompt_lens: List[int]) -> float: ...
     def decode_time(self, batch_size: int, ctx_lens: List[int]) -> float: ...
+    # optional fast path (see InstanceCostModel): an integer `ctx_clamp`
+    # attribute plus `decode_time(n, ctx_sum=...)` /
+    # `hybrid_time(..., decode_ctx_sum=...)` keyword forms that take the
+    # precomputed clamped-context sum instead of a per-sequence list
     # optional (EcoServe-CP): fused decode+chunk iteration
     # def hybrid_time(self, chunk_lens, prefix_lens, batch, ctxs): ...
 
@@ -52,6 +66,9 @@ class InstanceStatus:
 class Instance:
     """Simulation-state instance; also the scheduling brain reused by the
     real-exec engine (which overrides the executor with measured times)."""
+
+    # FuDG prefill-only instances override this (see baselines)
+    decode_here = True
 
     def __init__(self, iid: int, executor: ExecutorModel,
                  kv_capacity_tokens: int,
@@ -88,49 +105,189 @@ class Instance:
         self.busy_until = 0.0
         self._finished: List[Request] = []
 
+        # ---- incremental aggregates (see module docstring) ------------- #
+        # executors exposing ctx_clamp support the summed decode fast path
+        self._ctx_clamp = int(getattr(executor, "ctx_clamp", 0) or 0)
+        self._fast_ctx_sum = hasattr(executor, "ctx_clamp")
+        self._pending_tokens = 0       # sum of prompt_len over pending
+        self._decode_kv_sum = 0        # sum of r.kv_tokens() over decoding
+        self._decode_eff_sum = 0       # same, clamped at _ctx_clamp
+        self._version = 0              # bumped on any mutation
+        self._status_cache = None      # ((now, slo, version), status)
+        self._prefill_plan_cache = None  # (version, (batch, lens, dur, old))
+
     # ----------------------------------------------------------------- #
+    # mutators: the ONLY legal way to change pending/decoding membership
+    # ----------------------------------------------------------------- #
+    def _touch(self) -> None:
+        self._version += 1
+
+    def _eff(self, kv: int) -> int:
+        return min(kv, self._ctx_clamp) if self._ctx_clamp else kv
+
     def admit(self, req: Request, now: float) -> None:
         req.state = RequestState.PENDING
         req.admitted_time = now
         req.instance_id = self.iid
         self.pending.append(req)
+        self._pending_tokens += req.prompt_len
+        self._touch()
+
+    def remove_pending(self, req: Request) -> None:
+        self.pending.remove(req)
+        self._pending_tokens -= req.prompt_len
+        self._touch()
+
+    def add_decoding(self, req: Request) -> None:
+        kv = req.kv_tokens()
+        self.decoding.append(req)
+        self._decode_kv_sum += kv
+        self._decode_eff_sum += self._eff(kv)
+        self._touch()
+
+    def remove_decoding(self, req: Request) -> None:
+        kv = req.kv_tokens()
+        self.decoding.remove(req)
+        self._decode_kv_sum -= kv
+        self._decode_eff_sum -= self._eff(kv)
+        self._touch()
+
+    def _gen_token(self, req: Request) -> None:
+        """One decode token for a request currently in ``decoding``."""
+        req.tokens_generated += 1
+        self._decode_kv_sum += 1
+        if not self._ctx_clamp or req.kv_tokens() <= self._ctx_clamp:
+            self._decode_eff_sum += 1
+
+    def sync_tokens(self, req: Request, tokens_generated: int) -> None:
+        """Externally set ``req.tokens_generated`` (req must be in
+        ``decoding``), keeping the running aggregates consistent — used by
+        the real-exec server whose engine advances counts out-of-band."""
+        old_kv = req.kv_tokens()
+        req.tokens_generated = tokens_generated
+        new_kv = req.kv_tokens()
+        if new_kv != old_kv:
+            self._decode_kv_sum += new_kv - old_kv
+            self._decode_eff_sum += self._eff(new_kv) - self._eff(old_kv)
+            self._touch()
+
+    def handoff_prefilled(self, reqs: List[Request], t_end: float) -> None:
+        """FuDG prefill-only instance: mark first token and release the
+        batch for transfer to a decode instance."""
+        for r in reqs:
+            self.remove_pending(r)
+            r.first_token_time = t_end
+            r.tokens_generated = 1
 
     def kv_tokens_used(self) -> int:
-        used = sum(r.kv_tokens() for r in self.decoding)
-        used += sum(r.prompt_len for r in self.pending)
-        return used
+        return self._decode_kv_sum + self._pending_tokens
 
+    @property
+    def pending_tokens(self) -> int:
+        """Total prompt tokens awaiting prefill (O(1))."""
+        return self._pending_tokens
+
+    def audit_aggregates(self) -> dict:
+        """(incremental, recomputed-from-scratch) pairs — test hook for
+        the accounting invariants."""
+        eff = (lambda kv: min(kv, self._ctx_clamp)) if self._ctx_clamp \
+            else (lambda kv: kv)
+        return {
+            "pending_tokens": (
+                self._pending_tokens,
+                sum(r.prompt_len for r in self.pending)),
+            "decode_kv_sum": (
+                self._decode_kv_sum,
+                sum(r.kv_tokens() for r in self.decoding)),
+            "decode_eff_sum": (
+                self._decode_eff_sum,
+                sum(eff(r.kv_tokens()) for r in self.decoding)),
+        }
+
+    # ----------------------------------------------------------------- #
     def status(self, now: float, slo_tpot: float) -> InstanceStatus:
-        # memoized per (now, slo): Algorithm 1 probes every instance for
-        # every queued request at each slot boundary
-        cached = getattr(self, "_status_cache", None)
-        if cached is not None and cached[0] == (now, slo_tpot,
-                                                len(self.pending),
-                                                len(self.decoding)):
+        # memoized per (now, slo, version): Algorithm 1 probes every
+        # instance for every queued request at each slot boundary, and
+        # every mutator bumps _version — stale entries are impossible
+        key = (now, slo_tpot, self._version)
+        cached = self._status_cache
+        if cached is not None and cached[0] == key:
             return cached[1]
         st = self._status(now, slo_tpot)
-        self._status_cache = ((now, slo_tpot, len(self.pending),
-                               len(self.decoding)), st)
+        self._status_cache = (key, st)
         return st
 
     def _status(self, now: float, slo_tpot: float) -> InstanceStatus:
         n_next = min(len(self.decoding) + 1, self.max_decode_batch)
-        ctxs = [r.kv_tokens() for r in self.decoding][: n_next - 1]
+        if self._fast_ctx_sum and n_next - 1 == len(self.decoding):
+            dit = self.executor.decode_time(
+                n_next, ctx_sum=self._decode_eff_sum + self._eff(512))
+        else:
+            ctxs = [r.kv_tokens() for r in self.decoding][: n_next - 1]
+            dit = self.executor.decode_time(n_next, ctxs + [512])
         return InstanceStatus(
             iid=self.iid,
             phase=self.phase,
             pending_prefill_lens=[r.prompt_len for r in self.pending],
-            pending_prefill_tokens=sum(r.prompt_len for r in self.pending),
+            pending_prefill_tokens=self._pending_tokens,
             num_decoding=len(self.decoding),
             saved_tpots=[r.saved_tpot(now, slo_tpot) for r in self.decoding],
             kv_tokens_used=self.kv_tokens_used(),
             kv_tokens_capacity=self.kv_capacity_tokens,
             last_switch_time=self.last_switch_time,
-            decode_iter_time_plus_one=self.executor.decode_time(
-                n_next, ctxs + [512]),
+            decode_iter_time_plus_one=dit,
         )
 
     # ----------------------------------------------------------------- #
+    def _decode_iter_time(self, batch: List[Request]) -> float:
+        """Duration of one decode iteration over ``batch``: the O(1)
+        ctx-sum fast path when the executor supports it and the batch is
+        the whole decode set, else the per-request list path."""
+        if self._fast_ctx_sum and len(batch) == len(self.decoding):
+            return self.executor.decode_time(
+                len(batch), ctx_sum=self._decode_eff_sum)
+        return self.executor.decode_time(
+            len(batch), [r.kv_tokens() for r in batch])
+
+    def _hybrid_iter_time(self, chunk_lens: List[int],
+                          prefix_lens: List[int],
+                          batch: List[Request]) -> float:
+        """Duration of one fused decode+chunk iteration (same fast-path
+        rule as ``_decode_iter_time``)."""
+        if self._fast_ctx_sum and len(batch) == len(self.decoding):
+            return self.executor.hybrid_time(
+                chunk_lens, prefix_lens, len(batch),
+                decode_ctx_sum=self._decode_eff_sum)
+        return self.executor.hybrid_time(
+            chunk_lens, prefix_lens, len(batch),
+            [r.kv_tokens() for r in batch])
+
+    # ----------------------------------------------------------------- #
+    def _prefill_plan(self) -> Tuple[List[Request], List[int], float, float]:
+        """The actual next prefill batch (respecting max_prefill_tokens
+        and chunk progress), its duration, and the oldest pending arrival
+        — computed once per mutation and reused by both the slack guard
+        and ``next_slot``."""
+        cached = self._prefill_plan_cache
+        if cached is not None and cached[0] == self._version:
+            return cached[1]
+        batch: List[Request] = []
+        lens: List[int] = []
+        tokens = 0
+        for r in self.pending:
+            remaining = r.prompt_len - self._chunk_progress.get(r.rid, 0)
+            if batch and tokens + remaining > self.max_prefill_tokens:
+                break
+            batch.append(r)
+            lens.append(remaining)
+            tokens += remaining
+        dur = self.executor.prefill_time(lens) if lens else 0.0
+        oldest = min(r.arrival_time for r in self.pending) \
+            if self.pending else 0.0
+        plan = (batch, lens, dur, oldest)
+        self._prefill_plan_cache = (self._version, plan)
+        return plan
+
     def next_slot(self, now: float) -> Tuple[str, float, List[Request]]:
         """Decide and 'execute' the next slot starting at ``now``.
 
@@ -139,17 +296,7 @@ class Instance:
         now + duration via ``complete_slot``.
         """
         if self.pending and self._slack_allows_prefill(now):
-            batch: List[Request] = []
-            tokens = 0
-            for r in self.pending:
-                remaining = r.prompt_len - self._chunk_progress.get(r.rid, 0)
-                if batch and tokens + remaining > self.max_prefill_tokens:
-                    break
-                batch.append(r)
-                tokens += remaining
-            dur = self.executor.prefill_time(
-                [r.prompt_len - self._chunk_progress.get(r.rid, 0)
-                 for r in batch])
+            batch, _, dur, _ = self._prefill_plan()
             if self.phase != "prefill":
                 self.phase = "prefill"
                 self.last_switch_time = now
@@ -168,14 +315,12 @@ class Instance:
                     if take > 0:
                         chunks.append((r, take, done))
                         budget -= take
-                dur = self.executor.hybrid_time(
-                    [c[1] for c in chunks], [c[2] for c in chunks],
-                    len(batch), [r.kv_tokens() for r in batch])
+                dur = self._hybrid_iter_time(
+                    [c[1] for c in chunks], [c[2] for c in chunks], batch)
                 self._current_chunks = chunks
                 self.phase = "hybrid"
                 return "hybrid", dur, batch
-            dur = self.executor.decode_time(
-                len(batch), [r.kv_tokens() for r in batch])
+            dur = self._decode_iter_time(batch)
             if self.phase != "decode":
                 self.phase = "decode"
                 self.last_switch_time = now
@@ -185,13 +330,14 @@ class Instance:
 
     def _slack_allows_prefill(self, now: float) -> bool:
         """§3.1: execute decodes until enough TPOT slack has accumulated to
-        absorb the pending prefill slot without violating running decodes."""
+        absorb the pending prefill slot without violating running decodes.
+        Costs the *actual* next prefill batch (what ``next_slot`` would
+        run), cached until the pending set changes."""
         if self.slo_tpot is None or not self.decoding:
             return True
-        dur = self.executor.prefill_time([r.prompt_len for r in self.pending])
+        _, _, dur, oldest = self._prefill_plan()
         # anti-starvation: a pending prefill nearing its TTFT budget wins
         if self.slo_ttft is not None:
-            oldest = min(r.arrival_time for r in self.pending)
             if now - oldest + dur > 0.6 * self.slo_ttft:
                 return True
         saved = [r.saved_tpot(now, self.slo_tpot) for r in self.decoding]
@@ -205,7 +351,7 @@ class Instance:
         finished: List[Request] = []
         if kind == "prefill":
             for r in reqs:
-                self.pending.remove(r)
+                self.remove_pending(r)
                 self._chunk_progress.pop(r.rid, None)
                 r.first_token_time = t_end
                 r.tokens_generated = 1
@@ -215,23 +361,25 @@ class Instance:
                     finished.append(r)
                 else:
                     r.state = RequestState.DECODING
-                    self.decoding.append(r)
+                    self.add_decoding(r)
         elif kind in ("decode", "hybrid"):
             for r in reqs:
-                r.tokens_generated += 1
+                self._gen_token(r)
                 if r.tokens_generated == 2:
                     r.second_token_time = t_end
                 if r.tokens_generated >= r.output_len:
                     r.state = RequestState.FINISHED
                     r.finish_time = t_end
-                    self.decoding.remove(r)
+                    self.remove_decoding(r)
                     finished.append(r)
+            self._touch()   # decode token counts changed
             if kind == "hybrid":
                 for r, take, done in self._current_chunks:
                     new_done = done + take
                     self._chunk_progress[r.rid] = new_done
+                    self._touch()   # chunk progress feeds _prefill_plan
                     if new_done >= r.prompt_len:
-                        self.pending.remove(r)
+                        self.remove_pending(r)
                         del self._chunk_progress[r.rid]
                         r.first_token_time = t_end
                         r.tokens_generated = 1
@@ -241,7 +389,7 @@ class Instance:
                             finished.append(r)
                         else:
                             r.state = RequestState.DECODING
-                            self.decoding.append(r)
+                            self.add_decoding(r)
                 self._current_chunks = []
         self._finished.extend(finished)
         return finished

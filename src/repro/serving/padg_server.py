@@ -116,7 +116,8 @@ class PaDGServer:
         eng = inst.engine
         if inst.pending and eng.free_slots() and \
                 inst._slack_allows_prefill(self._now(inst)):
-            req = inst.pending.pop(0)
+            req = inst.pending[0]
+            inst.remove_pending(req)
             inst.phase = "prefill"
             eng.prefill(req)
             req.state = RequestState.DECODING
@@ -125,19 +126,19 @@ class PaDGServer:
             if req.tokens_generated >= req.output_len:
                 self._finish(inst, req)
             else:
-                inst.decoding.append(req)
+                inst.add_decoding(req)
             return True
         if inst.decoding:
             inst.phase = "decode"
             eng.decode_step()
             tnow = self._now(inst)
             for req in list(inst.decoding):
-                req.tokens_generated = len(req.generated)
+                inst.sync_tokens(req, len(req.generated))
                 if req.tokens_generated == 2:
                     req.second_token_time = tnow
                 still_running = any(r is req for r in eng.slot_req)
                 if not still_running:
-                    inst.decoding.remove(req)
+                    inst.remove_decoding(req)
                     self._finish(inst, req)
             return True
         inst.phase = "idle"

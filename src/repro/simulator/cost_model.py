@@ -4,6 +4,20 @@ Step durations are derived from the model config + hardware profile with
 per-phase efficiency factors calibrated against the paper's own Table 3
 measurements (Llama-30B prefill on an 8x L20 node: 6584.6 tok/s; on 8x
 A800: 26189.2 tok/s — see tests/test_cost_model.py for the check).
+
+The model is on the simulator's innermost loop (one ``decode_time`` call
+per decode iteration per instance), so all config-derived quantities
+(parameter counts, KV bytes/token, attention-layer count, roofline
+denominators) are computed once per ``InstanceCostModel`` and memoized in
+``_Consts``.  The memoized arithmetic keeps the exact floating-point
+operation order of the original formulas — results are bit-identical, so
+the golden regression grids do not move.
+
+``decode_time``/``hybrid_time`` additionally accept a precomputed
+effective-context *sum* (``ctx_sum``/``decode_ctx_sum``) so hot callers
+(``Instance``) can skip building a per-iteration Python list; context
+lengths are ints, so the summed fast path is exactly equal to the
+per-element path.
 """
 from __future__ import annotations
 
@@ -49,6 +63,19 @@ TPU_V5E_SIM = HardwareProfile(
 
 
 @dataclasses.dataclass(frozen=True)
+class _Consts:
+    """Per-(cfg, hw, tp, pp) constants hoisted out of the hot path."""
+    n_active: int              # active parameters (MoE: top-k experts)
+    param_bytes: int
+    kv_per_tok: int
+    attn_layers: int
+    sliding_window: int
+    prefill_flops_denom: float   # hw.flops * tp * prefill_eff
+    decode_flops_denom: float    # hw.flops * tp * 0.35
+    mem_denom: float             # hw.hbm_bw * decode_bw_eff
+
+
+@dataclasses.dataclass(frozen=True)
 class InstanceCostModel:
     """Cost model for ONE serving instance = `tp` x `pp` devices."""
     cfg: ModelConfig
@@ -63,12 +90,40 @@ class InstanceCostModel:
         return self.tp * self.pp
 
     @property
+    def _c(self) -> _Consts:
+        # memoized via the instance __dict__ (frozen dataclass: direct
+        # dict insertion sidesteps the generated __setattr__)
+        c = self.__dict__.get("_consts")
+        if c is None:
+            cfg, hw = self.cfg, self.hw
+            c = _Consts(
+                n_active=cfg.param_count(active_only=True),
+                param_bytes=cfg.param_count() * self.dtype_bytes,
+                kv_per_tok=cfg.kv_bytes_per_token(self.dtype_bytes),
+                attn_layers=sum(1 for k in cfg.block_kinds()
+                                if k in ("attn", "local")),
+                sliding_window=cfg.sliding_window,
+                prefill_flops_denom=hw.flops * self.tp * hw.prefill_eff,
+                decode_flops_denom=hw.flops * self.tp * 0.35,
+                mem_denom=hw.hbm_bw * hw.decode_bw_eff,
+            )
+            self.__dict__["_consts"] = c
+        return c
+
+    @property
     def param_bytes(self) -> int:
-        return self.cfg.param_count() * self.dtype_bytes
+        return self._c.param_bytes
+
+    @property
+    def ctx_clamp(self) -> int:
+        """Per-sequence context clamp for decode KV reads (0 = unbounded).
+        Callers maintaining an incremental context sum must clamp each
+        sequence at this value for ``ctx_sum`` fast paths to stay exact."""
+        return self._c.sliding_window
 
     def kv_capacity_tokens(self) -> int:
         """Tokens of KV cache that fit after weights (10% activation slack)."""
-        per_tok = self.cfg.kv_bytes_per_token(self.dtype_bytes)
+        per_tok = self._c.kv_per_tok
         if per_tok == 0:                       # attention-free: effectively
             return 10_000_000                  # unbounded by KV memory
         free = (self.hw.hbm_bytes * self.devices * 0.9) - self.param_bytes
@@ -79,16 +134,27 @@ class InstanceCostModel:
         """Megatron TP: 2 all-reduce per layer over activations."""
         if self.tp == 1:
             return 0.0
-        bytes_ar = tokens * self.cfg.d_model * self.dtype_bytes
-        wire = 2.0 * bytes_ar * (self.tp - 1) / self.tp      # ring
-        per_layer = wire / self.hw.intra_node_bw + self.hw.comm_latency
-        return 2 * self.cfg.num_layers * per_layer
+        memo = self.__dict__.setdefault("_comm_memo", {})
+        t = memo.get(tokens)
+        if t is None:
+            bytes_ar = tokens * self.cfg.d_model * self.dtype_bytes
+            wire = 2.0 * bytes_ar * (self.tp - 1) / self.tp      # ring
+            per_layer = wire / self.hw.intra_node_bw + self.hw.comm_latency
+            t = 2 * self.cfg.num_layers * per_layer
+            memo[tokens] = t
+        return t
 
     def _pp_overhead(self, t_stage_total: float, microbatches: int) -> float:
         """Pipeline bubble: (pp-1)/m extra on top of the stage time."""
         if self.pp == 1:
             return 0.0
         return t_stage_total * (self.pp - 1) / max(1, microbatches)
+
+    @staticmethod
+    def _eff_ctx_sum(ctx_lens: List[int], sliding_window: int) -> int:
+        if sliding_window:
+            return sum(min(c, sliding_window) for c in ctx_lens)
+        return sum(ctx_lens)
 
     # ------------------------------------------------------------------ #
     def prefill_time(self, prompt_lens: List[int],
@@ -97,71 +163,72 @@ class InstanceCostModel:
         chunks with kv_prefix_lens for the re-read of earlier chunks)."""
         if not prompt_lens:
             return 0.0
-        n_active = self.cfg.param_count(active_only=True)
+        c = self._c
         tokens = sum(prompt_lens)
-        flops = 2.0 * n_active * tokens
+        flops = 2.0 * c.n_active * tokens
         # attention: 2 matmuls of S^2 * H per head-dim-summed layer
-        attn_layers = sum(
-            1 for k in self.cfg.block_kinds() if k in ("attn", "local"))
         for i, s in enumerate(prompt_lens):
             ctx = s + (kv_prefix_lens[i] if kv_prefix_lens else 0)
-            eff_ctx = min(ctx, self.cfg.sliding_window) if (
-                self.cfg.sliding_window) else ctx
-            flops += 4.0 * attn_layers * s * eff_ctx * self.cfg.d_model
-        t_compute = flops / (self.hw.flops * self.tp * self.hw.prefill_eff)
+            eff_ctx = min(ctx, c.sliding_window) if c.sliding_window else ctx
+            flops += 4.0 * c.attn_layers * s * eff_ctx * self.cfg.d_model
+        t_compute = flops / c.prefill_flops_denom
         # weight + kv-prefix reads
-        bytes_moved = self.param_bytes / self.devices * min(
+        bytes_moved = c.param_bytes / self.devices * min(
             1.0, tokens / 256.0)   # weight reads amortize over the batch
         if kv_prefix_lens:
-            bytes_moved += sum(kv_prefix_lens) * \
-                self.cfg.kv_bytes_per_token(self.dtype_bytes) / self.devices
-        t_mem = bytes_moved / (self.hw.hbm_bw * self.hw.decode_bw_eff)
+            bytes_moved += sum(kv_prefix_lens) * c.kv_per_tok / self.devices
+        t_mem = bytes_moved / c.mem_denom
         t = max(t_compute, t_mem) / self.pp + self._tp_comm_time(tokens)
         return t + self._pp_overhead(t, microbatches=len(prompt_lens))
 
-    def decode_time(self, batch_size: int, ctx_lens: List[int]) -> float:
+    def decode_time(self, batch_size: int,
+                    ctx_lens: Optional[List[int]] = None,
+                    *, ctx_sum: Optional[int] = None) -> float:
         """One decode iteration for `batch_size` sequences.
+
+        Accepts either the per-sequence context lengths (``ctx_lens``) or
+        their precomputed effective sum (``ctx_sum``, already clamped at
+        ``ctx_clamp``); integer context lengths make the two exactly equal.
 
         PP does NOT cut single-batch decode latency (Fig. 11's premise):
         the pp stages run sequentially for one iteration, so weights/KV
         stream through only a tp-wide memory system."""
         if batch_size == 0:
             return 0.0
-        n_active = self.cfg.param_count(active_only=True)
-        flops = 2.0 * n_active * batch_size
-        t_compute = flops / (self.hw.flops * self.tp * 0.35)
-        per_tok = self.cfg.kv_bytes_per_token(self.dtype_bytes)
-        eff_ctxs = [min(c, self.cfg.sliding_window) if self.cfg.sliding_window
-                    else c for c in ctx_lens]
-        kv_bytes = per_tok * sum(eff_ctxs)
-        bytes_moved = (self.param_bytes + kv_bytes) / self.tp
-        t_mem = bytes_moved / (self.hw.hbm_bw * self.hw.decode_bw_eff)
+        c = self._c
+        flops = 2.0 * c.n_active * batch_size
+        t_compute = flops / c.decode_flops_denom
+        if ctx_sum is None:
+            ctx_sum = self._eff_ctx_sum(ctx_lens, c.sliding_window)
+        kv_bytes = c.kv_per_tok * ctx_sum
+        bytes_moved = (c.param_bytes + kv_bytes) / self.tp
+        t_mem = bytes_moved / c.mem_denom
         t = max(t_compute, t_mem) + self._tp_comm_time(batch_size)
         # pp point-to-point hops (small activations)
         t += (self.pp - 1) * self.hw.comm_latency
         return t
 
     def hybrid_time(self, chunk_lens: List[int], prefix_lens: List[int],
-                    decode_batch: int, decode_ctxs: List[int]) -> float:
+                    decode_batch: int,
+                    decode_ctxs: Optional[List[int]] = None,
+                    *, decode_ctx_sum: Optional[int] = None) -> float:
         """Sarathi-style fused iteration: decode batch + prefill chunks.
         Compute and memory streams overlap; chunked prefill re-reads the
-        KV prefix of earlier chunks (the paper's §2.4.1 criticism)."""
-        n_active = self.cfg.param_count(active_only=True)
-        flops = 2.0 * n_active * (sum(chunk_lens) + decode_batch)
-        attn_layers = sum(
-            1 for k in self.cfg.block_kinds() if k in ("attn", "local"))
+        KV prefix of earlier chunks (the paper's §2.4.1 criticism).
+        ``decode_ctx_sum`` is the clamped-context fast path, as in
+        ``decode_time``."""
+        c = self._c
+        flops = 2.0 * c.n_active * (sum(chunk_lens) + decode_batch)
         for s, p in zip(chunk_lens, prefix_lens):
-            flops += 4.0 * attn_layers * s * (s + p) * self.cfg.d_model
-        t_compute = flops / (self.hw.flops * self.tp * self.hw.prefill_eff)
+            flops += 4.0 * c.attn_layers * s * (s + p) * self.cfg.d_model
+        t_compute = flops / c.prefill_flops_denom
 
-        per_tok = self.cfg.kv_bytes_per_token(self.dtype_bytes)
-        bytes_moved = self.param_bytes / self.devices
-        bytes_moved += per_tok * sum(prefix_lens) / self.devices  # re-read
-        eff_ctxs = [min(c, self.cfg.sliding_window) if self.cfg.sliding_window
-                    else c for c in decode_ctxs]
-        bytes_moved += per_tok * sum(eff_ctxs) / self.devices
-        t_mem = bytes_moved * self.pp / (
-            self.hw.hbm_bw * self.hw.decode_bw_eff)
+        if decode_ctx_sum is None:
+            decode_ctx_sum = self._eff_ctx_sum(decode_ctxs, c.sliding_window)
+        bytes_moved = c.param_bytes / self.devices
+        bytes_moved += c.kv_per_tok * sum(prefix_lens) / self.devices
+        bytes_moved += c.kv_per_tok * decode_ctx_sum / self.devices
+        t_mem = bytes_moved * self.pp / c.mem_denom
         tokens = sum(chunk_lens) + decode_batch
         # hybrid iteration latency is decode-like: pp stages run
         # sequentially (t_compute above is already tp-width)
@@ -172,9 +239,16 @@ class InstanceCostModel:
     # ------------------------------------------------------------------ #
     def kv_transfer_bytes(self, prompt_len: int) -> int:
         """KV cache bytes leaving a FuDG prefill instance per request."""
-        return prompt_len * self.cfg.kv_bytes_per_token(self.dtype_bytes)
+        return prompt_len * self._c.kv_per_tok
 
     def predict_prefill(self, prompt_len: int) -> float:
         """Single-request prefill-duration predictor used by Algorithm 2
-        (paper: profiled offline over sequence lengths)."""
-        return self.prefill_time([prompt_len])
+        (paper: profiled offline over sequence lengths).  Memoized per
+        prompt length — Algorithm 1 probes every instance's pending queue
+        with it at each slot boundary."""
+        memo = self.__dict__.setdefault("_prefill_memo", {})
+        t = memo.get(prompt_len)
+        if t is None:
+            t = self.prefill_time([prompt_len])
+            memo[prompt_len] = t
+        return t

@@ -2,15 +2,26 @@
 
 Drives any ``ServingSystem`` (PaDG / NoDG / FuDG variants): request
 arrivals, instance slot completions, and link transfers share one event
-heap.  Instances execute uninterruptible slots (prefill batch or decode
-iteration); systems decide routing and what happens at slot boundaries.
+timeline.  Instances execute uninterruptible slots (prefill batch or
+decode iteration); systems decide routing and what happens at slot
+boundaries.
+
+Arrivals are fed lazily from the (time-sorted) request list instead of
+pre-pushing one heap event per request: the heap only ever holds in-flight
+completions/transfers, and no per-request closure is allocated.  Ties are
+resolved exactly as the old pre-pushed encoding did — an arrival at time t
+fires before any completion scheduled at the same t (arrivals used to
+carry the lowest sequence numbers), and equal-time arrivals fire in
+request-list order (stable sort).  Slot completions are dispatched through
+one engine method with an argument tuple stored on the event, not a fresh
+closure capturing per-request state.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Dict, List, Optional, Protocol
+from typing import Callable, Dict, List, Optional, Protocol, Tuple
 
 from repro.core.instance import Instance
 from repro.core.request import Request
@@ -47,6 +58,7 @@ class _Event:
     time: float
     seq: int
     fn: Callable = dataclasses.field(compare=False)
+    args: Tuple = dataclasses.field(compare=False, default=())
 
 
 class SimulationEngine:
@@ -63,6 +75,10 @@ class SimulationEngine:
     def push(self, t: float, fn: Callable) -> None:
         heapq.heappush(self.heap, _Event(t, next(self._seq), fn))
 
+    def push_call(self, t: float, fn: Callable, *args) -> None:
+        """Schedule ``fn(*args)`` at time ``t`` without a closure."""
+        heapq.heappush(self.heap, _Event(t, next(self._seq), fn, args))
+
     def activate(self, inst: Instance) -> None:
         """Ensure the instance is executing a slot (idempotent)."""
         if self._executing.get(inst.iid):
@@ -72,38 +88,47 @@ class SimulationEngine:
             return
         self._executing[inst.iid] = True
         t_end = self.now + dur
+        self.push_call(t_end, self._complete_slot, inst, kind, reqs, t_end)
 
-        def complete():
-            self._executing[inst.iid] = False
-            if kind == "prefill" and not getattr(inst, "decode_here", True):
-                # FuDG prefill instance: mark first token, hand off
-                for r in reqs:
-                    inst.pending.remove(r)
-                    r.first_token_time = t_end
-                    r.tokens_generated = 1
-                self.system.on_slot_end(inst, "prefill_handoff", reqs,
-                                        self.now, self)
-            else:
-                done = inst.complete_slot(kind, reqs, t_end)
-                self.finished.extend(done)
-                self.system.on_slot_end(inst, kind, reqs, self.now, self)
-            self.activate(inst)
-
-        self.push(t_end, complete)
+    def _complete_slot(self, inst: Instance, kind: str,
+                       reqs: List[Request], t_end: float) -> None:
+        self._executing[inst.iid] = False
+        if kind == "prefill" and not inst.decode_here:
+            # FuDG prefill instance: mark first token, hand off
+            inst.handoff_prefilled(reqs, t_end)
+            self.system.on_slot_end(inst, "prefill_handoff", reqs,
+                                    self.now, self)
+        else:
+            done = inst.complete_slot(kind, reqs, t_end)
+            self.finished.extend(done)
+            self.system.on_slot_end(inst, kind, reqs, self.now, self)
+        self.activate(inst)
 
     # ------------------------------------------------------------------ #
     def run(self, requests: List[Request], horizon: float) -> List[Request]:
-        for req in requests:
-            def arrive(r=req):
-                self.system.submit(r, self.now, self)
-            self.push(req.arrival_time, arrive)
-
-        while self.heap:
-            ev = heapq.heappop(self.heap)
-            if ev.time > horizon:
+        # stable sort == (arrival_time, original index): the exact total
+        # order the old per-request heap events produced
+        arrivals = sorted(requests, key=lambda r: r.arrival_time)
+        i, n = 0, len(arrivals)
+        heap = self.heap
+        while True:
+            t_arr = arrivals[i].arrival_time if i < n else None
+            if heap and (t_arr is None or heap[0].time < t_arr):
+                ev = heapq.heappop(heap)
+                if ev.time > horizon:
+                    break
+                self.now = ev.time
+                ev.fn(*ev.args)
+            elif t_arr is not None:
+                # t_arr <= next event time: arrivals win ties
+                if t_arr > horizon:
+                    break
+                self.now = t_arr
+                req = arrivals[i]
+                i += 1
+                self.system.submit(req, self.now, self)
+            else:
                 break
-            self.now = ev.time
-            ev.fn()
             if self.on_tick:
                 self.on_tick(self.now)
         return self.finished

@@ -56,28 +56,34 @@ def run_once(system_factory: Callable[[], object], workload,
 
 def goodput(system_factory, workload, slo, target_attainment: float,
             lo: float = 0.05, hi: float = 64.0, tol: float = 0.10,
-            duration: float = 240.0, seed: int = 0) -> Dict[str, float]:
-    """Binary search for the highest rate with attainment >= target.
+            duration: float = 240.0, warmup: float = None,
+            seed: int = 0) -> Dict[str, float]:
+    """Binary search for the highest rate with attainment >= target
+    (the paper's Fig. 8 metric, per traffic shape).
     Unfinished requests count against attainment via the completion factor.
     ``workload`` is a ``WorkloadProfile`` or a ``(rate, seed) -> scenario``
     factory (a fixed scenario has no rate knob to search over).
-    Returns {goodput, attainment_at_goodput, ...}."""
+    Returns {goodput, attainment_at_goodput, probes, ...}."""
     if not isinstance(workload, WorkloadProfile) and \
             hasattr(workload, "generate"):
         raise TypeError(
             "goodput() searches over request rates, but a fixed scenario "
             "object ignores the probed rate; pass a WorkloadProfile or a "
             "(rate, seed) -> scenario factory instead")
+    probes = 0
 
     def ok(rate: float) -> bool:
+        nonlocal probes
+        probes += 1
         m = run_once(system_factory, workload, rate, slo,
-                     duration=duration, seed=seed)
+                     duration=duration, warmup=warmup, seed=seed)
         return m["attainment"] * min(1.0, m["completion"] + 1e-9) \
             >= target_attainment
 
     if not ok(lo):
-        return {"goodput": 0.0, "target": target_attainment}
-    # exponential growth then bisection
+        return {"goodput": 0.0, "target": target_attainment,
+                "probes": float(probes)}
+    # geometric bisection between the bracketing rates
     while hi / lo > 1 + tol:
         mid = (lo * hi) ** 0.5
         if ok(mid):
@@ -85,8 +91,9 @@ def goodput(system_factory, workload, slo, target_attainment: float,
         else:
             hi = mid
     final = run_once(system_factory, workload, lo, slo,
-                     duration=duration, seed=seed + 1)
+                     duration=duration, warmup=warmup, seed=seed + 1)
     return {"goodput": lo, "target": target_attainment,
+            "probes": float(probes),
             "attainment": final["attainment"], **{
                 k: v for k, v in final.items()
                 if k.startswith(("ttft", "tpot"))}}

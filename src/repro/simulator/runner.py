@@ -9,12 +9,30 @@ which is salted per process — so the result grid is bit-exactly
 reproducible regardless of worker count or scheduling order.  The grid
 feeds ``benchmarks/bench_scenarios.py`` and the golden regression test in
 ``tests/test_scenarios.py``.
+
+Two per-cell modes:
+
+* ``mode="fixed"`` (default) — one simulation per (strategy, scenario,
+  rate) cell, reporting SLO attainment at that fixed rate.
+* ``mode="goodput"`` — one cell per (strategy, scenario): the worker
+  binary-searches the highest request rate whose attainment still meets
+  ``target_attainment`` (DistServe-style goodput search, the paper's
+  Fig. 8 frontier per traffic shape).  Practical only because the
+  simulator hot path is fast enough to run the ~10 probe simulations a
+  search needs inside a single worker.
+
+Cells run through ``imap_unordered`` with per-cell error capture: a
+crashing cell yields a row carrying its spec and the error string instead
+of poisoning the whole ``pool.map``.  Pass ``stream_path`` to append one
+JSONL row per *finished* cell so long sweeps survive interruption.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import json
 import multiprocessing
+import traceback
 import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -22,7 +40,7 @@ from repro.configs import get_config
 from repro.core.slo import DATASET_SLOS
 from repro.simulator.cost_model import (GPU_A800, GPU_L20, TPU_V5E_SIM,
                                         InstanceCostModel)
-from repro.simulator.metrics import run_once
+from repro.simulator.metrics import goodput, run_once
 from repro.simulator.scenarios import SCENARIO_KINDS, make_scenario
 
 HARDWARE = {"L20": GPU_L20, "A800": GPU_A800, "tpu-v5e": TPU_V5E_SIM}
@@ -30,6 +48,13 @@ HARDWARE = {"L20": GPU_L20, "A800": GPU_A800, "tpu-v5e": TPU_V5E_SIM}
 # metrics kept in the persisted grid (attainment + tail latency summary)
 SUMMARY_KEYS = ("attainment", "completion", "finished",
                 "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
+GOODPUT_SUMMARY_KEYS = ("goodput", "target", "probes", "attainment",
+                        "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
+
+# runner fields that parameterize the goodput search; excluded from the
+# persisted meta in fixed mode so pre-existing golden grids stay valid
+_GOODPUT_FIELDS = ("mode", "target_attainment", "goodput_lo", "goodput_hi",
+                   "goodput_tol")
 
 
 def cell_seed(base_seed: int, strategy: str, scenario: str,
@@ -40,7 +65,9 @@ def cell_seed(base_seed: int, strategy: str, scenario: str,
 
 
 def _run_cell(spec: Dict) -> Dict:
-    """Worker entry point: one (strategy, scenario, rate) simulation."""
+    """Worker entry point: one (strategy, scenario, rate) simulation, or
+    one per-(strategy, scenario) goodput search when spec["mode"] is
+    "goodput"."""
     # imported here (not module level): repro.baselines pulls in the
     # system classes, which import repro.simulator — a cycle at load time
     from repro.baselines import make_system
@@ -48,17 +75,42 @@ def _run_cell(spec: Dict) -> Dict:
                              hw=HARDWARE[spec["hw"]],
                              tp=spec["tp"], pp=spec["pp"])
     slo = DATASET_SLOS[spec["workload"]]
-    scenario = make_scenario(spec["scenario"], spec["workload"],
-                             spec["rate"], seed=spec["seed"])
 
     def factory():
         return make_system(spec["strategy"], cost, spec["n_instances"], slo)
 
+    if spec.get("mode") == "goodput":
+        # rate knob stays live inside the search: each probe regenerates
+        # the scenario at the probed rate under the cell's fixed seed
+        scen_factory = functools.partial(make_scenario, spec["scenario"],
+                                         spec["workload"])
+        g = goodput(factory, scen_factory, slo,
+                    target_attainment=spec["target_attainment"],
+                    lo=spec["goodput_lo"], hi=spec["goodput_hi"],
+                    tol=spec["goodput_tol"], duration=spec["duration"],
+                    warmup=spec["warmup"], seed=spec["seed"])
+        summary = {k: g[k] for k in GOODPUT_SUMMARY_KEYS if k in g}
+        return {**spec, "metrics": summary}
+
+    scenario = make_scenario(spec["scenario"], spec["workload"],
+                             spec["rate"], seed=spec["seed"])
     metrics = run_once(factory, scenario, spec["rate"], slo,
                        duration=spec["duration"], warmup=spec["warmup"],
                        seed=spec["seed"])
     summary = {k: metrics[k] for k in SUMMARY_KEYS if k in metrics}
     return {**spec, "metrics": summary}
+
+
+def _run_cell_safe(item: Tuple[int, Dict]) -> Tuple[int, Dict]:
+    """imap_unordered entry: never raises — a failed cell reports its spec
+    and the error so the rest of the grid survives."""
+    idx, spec = item
+    try:
+        return idx, _run_cell(spec)
+    except Exception as exc:  # noqa: BLE001 — deliberate catch-all
+        return idx, {**spec,
+                     "error": f"{type(exc).__name__}: {exc}",
+                     "traceback": traceback.format_exc(limit=8)}
 
 
 @dataclasses.dataclass
@@ -79,17 +131,43 @@ class ExperimentRunner:
     warmup: Optional[float] = None
     base_seed: int = 0
     n_workers: Optional[int] = None   # None: one per core, capped by cells
+    # ---- goodput mode (Fig. 8 frontier) ------------------------------- #
+    mode: str = "fixed"               # "fixed" | "goodput"
+    target_attainment: float = 0.9
+    goodput_lo: float = 0.25          # search bracket (req/s)
+    goodput_hi: float = 32.0
+    goodput_tol: float = 0.10         # relative rate tolerance
+    # append one JSONL row per finished cell (crash/interrupt recovery)
+    stream_path: Optional[str] = None
 
     def __post_init__(self):
         if self.strategies is None:
             from repro.baselines import STRATEGIES
             self.strategies = STRATEGIES
+        if self.mode not in ("fixed", "goodput"):
+            raise ValueError(f"unknown mode {self.mode!r}; "
+                             "expected 'fixed' or 'goodput'")
 
     def cells(self) -> List[Dict]:
         common = dict(model=self.model, hw=self.hw, tp=self.tp, pp=self.pp,
                       n_instances=self.n_instances, workload=self.workload,
                       duration=self.duration, warmup=self.warmup)
         out = []
+        if self.mode == "goodput":
+            common.update(mode="goodput",
+                          target_attainment=self.target_attainment,
+                          goodput_lo=self.goodput_lo,
+                          goodput_hi=self.goodput_hi,
+                          goodput_tol=self.goodput_tol)
+            for strat in self.strategies:
+                for scen in self.scenarios:
+                    # rate 0.0 = the search's seed sentinel: one seed per
+                    # (strategy, scenario), shared by every probe
+                    out.append({**common, "strategy": strat,
+                                "scenario": scen,
+                                "seed": cell_seed(self.base_seed, strat,
+                                                  scen, 0.0)})
+            return out
         for strat in self.strategies:
             for scen in self.scenarios:
                 for rate in self.rates:
@@ -104,30 +182,65 @@ class ExperimentRunner:
         workers = self.n_workers
         if workers is None:
             workers = min(len(specs), multiprocessing.cpu_count())
-        if workers > 1:
-            # spawn, not fork: the parent may have imported jax (pytest,
-            # notebooks), and forking a multithreaded process can deadlock
-            ctx = multiprocessing.get_context("spawn")
-            with ctx.Pool(workers) as pool:
-                rows = pool.map(_run_cell, specs)
-        else:
-            rows = [_run_cell(s) for s in specs]
+        rows: List[Optional[Dict]] = [None] * len(specs)
+        stream = open(self.stream_path, "a") if self.stream_path else None
+        try:
+            if workers > 1:
+                # spawn, not fork: the parent may have imported jax
+                # (pytest, notebooks), and forking a multithreaded process
+                # can deadlock
+                ctx = multiprocessing.get_context("spawn")
+                with ctx.Pool(workers) as pool:
+                    for idx, row in pool.imap_unordered(
+                            _run_cell_safe, list(enumerate(specs))):
+                        rows[idx] = row
+                        self._stream_row(stream, idx, row)
+            else:
+                for idx, spec in enumerate(specs):
+                    _, row = _run_cell_safe((idx, spec))
+                    rows[idx] = row
+                    self._stream_row(stream, idx, row)
+        finally:
+            if stream is not None:
+                stream.close()
         meta = dataclasses.asdict(self)
         meta.pop("n_workers")        # parallelism does not affect results
+        meta.pop("stream_path")      # neither does streaming
+        if self.mode == "fixed":     # keep legacy golden meta stable
+            for k in _GOODPUT_FIELDS:
+                meta.pop(k)
         meta["strategies"] = list(self.strategies)
         meta["scenarios"] = list(self.scenarios)
         meta["rates"] = list(self.rates)
-        return {"meta": meta, "cells": rows}
+        results = {"meta": meta, "cells": rows}
+        errors = [r for r in rows if r is not None and "error" in r]
+        if errors:
+            results["errors"] = [
+                {k: v for k, v in r.items() if k != "traceback"}
+                for r in errors]
+        return results
+
+    @staticmethod
+    def _stream_row(stream, idx: int, row: Dict) -> None:
+        if stream is None:
+            return
+        stream.write(json.dumps({"cell_index": idx, **row},
+                                sort_keys=True) + "\n")
+        stream.flush()
 
     # ------------------------------------------------------------------ #
     @staticmethod
     def grid(results: Dict) -> Dict[str, Dict[str, Dict[float, Dict]]]:
-        """Pivot the flat cell list to [strategy][scenario][rate]."""
-        out: Dict[str, Dict[str, Dict[float, Dict]]] = {}
+        """Pivot the flat cell list to [strategy][scenario][rate]
+        (fixed mode) or [strategy][scenario] (goodput mode)."""
+        out: Dict[str, Dict[str, Dict]] = {}
         for cell in results["cells"]:
-            out.setdefault(cell["strategy"], {}) \
-               .setdefault(cell["scenario"], {})[cell["rate"]] = \
-               cell["metrics"]
+            by_scen = out.setdefault(cell["strategy"], {})
+            if cell.get("mode") == "goodput":
+                by_scen[cell["scenario"]] = cell.get("metrics", cell)
+            else:
+                by_scen.setdefault(cell["scenario"], {})[cell["rate"]] = \
+                    cell.get("metrics", cell)
         return out
 
     @staticmethod
@@ -155,4 +268,19 @@ def regression_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
         rates=(6.0,),
         model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
         workload="sharegpt", duration=20.0, warmup=3.0,
+        base_seed=42, n_workers=n_workers)
+
+
+def goodput_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
+    """The canonical goodput-frontier grid (Fig. 8 per traffic shape),
+    sized for CI; pinned by tests/golden/goodput_frontier.json.  The
+    duration/lo pairing keeps >= ~24 scored requests per probe so a
+    single end-of-window straggler can't sink the completion factor."""
+    return ExperimentRunner(
+        strategies=("ecoserve", "vllm", "mooncake"),
+        scenarios=("poisson", "bursty"),
+        mode="goodput", target_attainment=0.9,
+        goodput_lo=1.0, goodput_hi=24.0, goodput_tol=0.35,
+        model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
+        workload="sharegpt", duration=24.0, warmup=3.0,
         base_seed=42, n_workers=n_workers)

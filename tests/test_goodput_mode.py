@@ -1,0 +1,110 @@
+"""Goodput-frontier mode of the ExperimentRunner (paper Fig. 8): the
+in-worker binary search over request rates, its golden regression
+fixture, per-cell crash capture, and JSONL row streaming.
+
+Regenerate the fixture (after an *intentional* change) with:
+
+    PYTHONPATH=src python -m benchmarks.bench_scenarios --write-golden-goodput
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.simulator.runner import (ExperimentRunner, _run_cell_safe,
+                                    goodput_runner)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "goodput_frontier.json"
+
+
+# --------------------------------------------------------------------- #
+# golden frontier
+# --------------------------------------------------------------------- #
+def test_goodput_golden_reproduced_bit_exactly():
+    golden = ExperimentRunner.load(GOLDEN)
+    fresh = goodput_runner(n_workers=2).run()
+    assert fresh["meta"] == golden["meta"], \
+        "goodput grid spec drifted from the golden fixture"
+    want = json.dumps(golden["cells"], sort_keys=True)
+    got = json.dumps(fresh["cells"], sort_keys=True)
+    assert got == want, (
+        "goodput frontier no longer reproduces the golden metrics; if "
+        "intentional, regenerate with `python -m benchmarks."
+        "bench_scenarios --write-golden-goodput` and review the diff")
+
+
+def test_goodput_golden_is_a_sane_frontier():
+    golden = ExperimentRunner.load(GOLDEN)
+    grid = ExperimentRunner.grid(golden)
+    # every (strategy, scenario) cell carries a searched rate + probes
+    for strat in ("ecoserve", "vllm", "mooncake"):
+        for scen in ("poisson", "bursty"):
+            cell = grid[strat][scen]
+            assert cell["goodput"] > 0.0, (strat, scen)
+            assert cell["probes"] >= 2, (strat, scen)
+    # headline claims at the frontier: PaDG beats NoDG under poisson,
+    # and FuDG over commodity Ethernet trails both (paper Fig. 8)
+    assert grid["ecoserve"]["poisson"]["goodput"] >= \
+        0.8 * grid["vllm"]["poisson"]["goodput"]
+    assert grid["mooncake"]["poisson"]["goodput"] < \
+        grid["ecoserve"]["poisson"]["goodput"]
+
+
+def test_goodput_cells_have_one_seed_per_strategy_scenario():
+    specs = goodput_runner().cells()
+    assert all(s["mode"] == "goodput" and "rate" not in s for s in specs)
+    seeds = {s["seed"] for s in specs}
+    assert len(seeds) == len(specs)
+
+
+def test_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="mode"):
+        ExperimentRunner(mode="bogus")
+
+
+# --------------------------------------------------------------------- #
+# crash capture + streaming
+# --------------------------------------------------------------------- #
+def _tiny_runner(**kw):
+    return ExperimentRunner(
+        strategies=("ecoserve",), scenarios=("poisson",), rates=(2.0,),
+        model="llama-30b", hw="L20", tp=4, n_instances=2,
+        duration=5.0, warmup=1.0, base_seed=7, n_workers=1, **kw)
+
+
+def test_failed_cell_reports_spec_instead_of_poisoning_grid():
+    idx, row = _run_cell_safe((3, {"strategy": "no-such-strategy",
+                                   "scenario": "poisson", "rate": 1.0,
+                                   "model": "llama-30b", "hw": "L20",
+                                   "tp": 4, "pp": 1, "n_instances": 2,
+                                   "workload": "sharegpt",
+                                   "duration": 5.0, "warmup": 1.0,
+                                   "seed": 1}))
+    assert idx == 3
+    assert "error" in row and "KeyError" in row["error"]
+    assert row["strategy"] == "no-such-strategy"   # spec preserved
+    assert "traceback" in row
+
+
+def test_runner_surfaces_errors_and_keeps_good_cells():
+    r = _tiny_runner()
+    r.strategies = ("ecoserve", "no-such-strategy")
+    results = r.run()
+    assert len(results["cells"]) == 2
+    good = [c for c in results["cells"] if "metrics" in c]
+    bad = [c for c in results["cells"] if "error" in c]
+    assert len(good) == 1 and len(bad) == 1
+    assert results["errors"][0]["strategy"] == "no-such-strategy"
+    assert "traceback" not in results["errors"][0]
+
+
+def test_streaming_writes_one_jsonl_row_per_cell(tmp_path):
+    path = tmp_path / "rows.jsonl"
+    results = _tiny_runner(stream_path=str(path)).run()
+    lines = [json.loads(x) for x in path.read_text().splitlines()]
+    assert len(lines) == len(results["cells"]) == 1
+    assert lines[0]["cell_index"] == 0
+    assert lines[0]["metrics"] == results["cells"][0]["metrics"]
+    # append semantics: a second run extends the log (interrupt recovery)
+    _tiny_runner(stream_path=str(path)).run()
+    assert len(path.read_text().splitlines()) == 2

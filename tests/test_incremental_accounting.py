@@ -1,0 +1,203 @@
+"""The instance's O(1) running aggregates must equal the from-scratch
+sums after ANY sequence of admit / slot-complete / chunk / hand-off /
+external-sync operations — this is the safety net under the simulator
+hot-path optimization (kv_tokens_used, status, decode fast path all read
+the aggregates instead of re-summing)."""
+import random
+
+import pytest
+
+from repro.core.instance import Instance
+from repro.core.request import Request
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:        # degrade to the seeded fallback drive below
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+
+class Exec:
+    """Cheap executor WITH the ctx_sum fast path (mirrors the cost model's
+    interface so the clamped-sum bookkeeping is exercised)."""
+
+    def __init__(self, ctx_clamp=0):
+        self.ctx_clamp = ctx_clamp
+
+    def prefill_time(self, lens):
+        return 1e-4 * sum(lens)
+
+    def decode_time(self, b, ctx_lens=None, *, ctx_sum=None):
+        if ctx_sum is None:
+            sw = self.ctx_clamp
+            ctx_sum = sum(min(c, sw) if sw else c for c in ctx_lens)
+        return 0.01 + 1e-7 * ctx_sum
+
+    def hybrid_time(self, chunks, prefixes, b, decode_ctxs=None,
+                    *, decode_ctx_sum=None):
+        if decode_ctx_sum is None:
+            sw = self.ctx_clamp
+            decode_ctx_sum = sum(
+                min(c, sw) if sw else c for c in decode_ctxs)
+        return 0.01 + 1e-4 * sum(chunks) + 1e-7 * decode_ctx_sum
+
+
+def _assert_consistent(inst):
+    for name, (fast, slow) in inst.audit_aggregates().items():
+        assert fast == slow, (name, fast, slow)
+
+
+def _drive_instance(reqs, chunked, clamp, slo_tpot):
+    """Drive the full slot loop (prefill / decode / hybrid chunks) with
+    the given requests; after every step the incremental aggregates must
+    equal the recomputed sums."""
+    inst = Instance(0, Exec(ctx_clamp=clamp), kv_capacity_tokens=10**9,
+                    slo_tpot=slo_tpot, slo_ttft=1.0,
+                    chunked_fallback=chunked)
+    queue = [Request(rid=i, arrival_time=0.05 * i, prompt_len=p,
+                     output_len=o) for i, (p, o) in enumerate(reqs)]
+    now, idx = 0.0, 0
+    for _ in range(20_000):
+        while idx < len(queue) and queue[idx].arrival_time <= now:
+            inst.admit(queue[idx], now)
+            _assert_consistent(inst)
+            idx += 1
+        kind, dur, batch = inst.next_slot(now)
+        if kind == "idle":
+            if idx >= len(queue):
+                break
+            now = queue[idx].arrival_time
+            continue
+        now += dur
+        inst.complete_slot(kind, batch, now)
+        _assert_consistent(inst)
+    assert len(inst._finished) == len(queue)
+    assert inst.kv_tokens_used() == 0
+
+
+def _handoff_and_sync(reqs, clamp):
+    """The FuDG hand-off path (remove_pending + add_decoding on another
+    instance) and the real-exec sync_tokens path keep both instances'
+    aggregates exact."""
+    src = Instance(0, Exec(ctx_clamp=clamp), kv_capacity_tokens=10**9)
+    dst = Instance(1, Exec(ctx_clamp=clamp), kv_capacity_tokens=10**9)
+    rs = [Request(rid=i, arrival_time=0.0, prompt_len=p, output_len=o + 1)
+          for i, (p, o) in enumerate(reqs)]
+    for r in rs:
+        src.admit(r, 0.0)
+        _assert_consistent(src)
+    src.handoff_prefilled(list(src.pending), 0.5)
+    _assert_consistent(src)
+    assert src.kv_tokens_used() == 0
+    for r in rs:
+        dst.add_decoding(r)
+        _assert_consistent(dst)
+    # external engine advances token counts out-of-band (padg_server path)
+    for step, r in enumerate(rs):
+        dst.sync_tokens(r, r.tokens_generated + 1 + step % 3)
+        _assert_consistent(dst)
+    for r in list(dst.decoding):
+        dst.remove_decoding(r)
+        _assert_consistent(dst)
+    assert dst.kv_tokens_used() == 0
+
+
+if HAVE_HYPOTHESIS:
+    REQ = st.tuples(st.integers(1, 600),      # prompt_len
+                    st.integers(1, 12))       # output_len
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(reqs=st.lists(REQ, min_size=1, max_size=25),
+           chunked=st.sampled_from([0, 64]),
+           clamp=st.sampled_from([0, 128]),
+           slo_tpot=st.sampled_from([None, 0.1]))
+    def test_aggregates_match_recomputation_under_random_drive(
+            reqs, chunked, clamp, slo_tpot):
+        _drive_instance(reqs, chunked, clamp, slo_tpot)
+
+    @needs_hypothesis
+    @settings(max_examples=40, deadline=None)
+    @given(reqs=st.lists(REQ, min_size=1, max_size=12),
+           clamp=st.sampled_from([0, 100]))
+    def test_aggregates_survive_handoff_and_external_sync(reqs, clamp):
+        _handoff_and_sync(reqs, clamp)
+
+
+@pytest.mark.parametrize("chunked,clamp,slo_tpot", [
+    (0, 0, None), (0, 0, 0.1), (64, 0, 0.1),
+    (64, 128, 0.1), (0, 128, None),
+])
+def test_aggregates_match_recomputation_seeded(chunked, clamp, slo_tpot):
+    """Seeded fallback drive (always runs, even without hypothesis)."""
+    rng = random.Random(1234 + chunked + clamp)
+    for _ in range(8):
+        reqs = [(rng.randint(1, 600), rng.randint(1, 12))
+                for _ in range(rng.randint(1, 25))]
+        _drive_instance(reqs, chunked, clamp, slo_tpot)
+
+
+@pytest.mark.parametrize("clamp", [0, 100])
+def test_handoff_and_sync_seeded(clamp):
+    rng = random.Random(99 + clamp)
+    for _ in range(8):
+        reqs = [(rng.randint(1, 600), rng.randint(1, 12))
+                for _ in range(rng.randint(1, 12))]
+        _handoff_and_sync(reqs, clamp)
+
+
+def test_kv_tokens_used_matches_legacy_definition():
+    """kv_tokens_used == sum(kv_tokens over decoding) + sum(prompt_len
+    over pending), exactly as the pre-optimization code computed it."""
+    inst = Instance(0, Exec(), kv_capacity_tokens=10**9)
+    a = Request(rid=1, arrival_time=0.0, prompt_len=100, output_len=5)
+    b = Request(rid=2, arrival_time=0.0, prompt_len=40, output_len=5)
+    inst.admit(a, 0.0)
+    inst.admit(b, 0.0)
+    assert inst.kv_tokens_used() == 140
+    kind, dur, batch = inst.next_slot(0.0)
+    inst.complete_slot(kind, batch, dur)
+    want = sum(r.kv_tokens() for r in inst.decoding) + \
+        sum(r.prompt_len for r in inst.pending)
+    assert inst.kv_tokens_used() == want == 142   # 100+1 and 40+1
+
+
+def test_status_cache_invalidated_by_mutation_at_same_timestamp():
+    """The old (now, slo, len, len) cache key went stale when a mutation
+    preserved list lengths; the version-keyed cache must not."""
+    inst = Instance(0, Exec(), kv_capacity_tokens=10**9)
+    r = Request(rid=1, arrival_time=0.0, prompt_len=100, output_len=50)
+    inst.admit(r, 0.0)
+    kind, dur, batch = inst.next_slot(0.0)
+    inst.complete_slot(kind, batch, dur)       # r now decoding
+    st1 = inst.status(1.0, 0.1)
+    # a decode iteration changes tokens_generated but not len(decoding)
+    kind, dur, batch = inst.next_slot(1.0)
+    inst.complete_slot(kind, batch, 1.0 + dur)
+    st2 = inst.status(1.0, 0.1)
+    assert st2.kv_tokens_used == st1.kv_tokens_used + 1
+    assert st2.saved_tpots != st1.saved_tpots
+
+
+def test_ctx_sum_fast_path_matches_list_path():
+    """decode_time / status must be identical whether the executor takes
+    the incremental ctx sum or the per-request list (sliding-window clamp
+    included)."""
+    from repro.configs import get_config
+    from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+    import dataclasses as dc
+    base = get_config("llama-30b")
+    for cfg in (base, dc.replace(base, sliding_window=256,
+                                 block_pattern=("local",))):
+        cm = InstanceCostModel(cfg=cfg, hw=GPU_L20, tp=4)
+        ctxs = [100, 300, 700, 5, 256, 257]
+        sw = cm.ctx_clamp
+        eff = sum(min(c, sw) if sw else c for c in ctxs)
+        assert cm.decode_time(len(ctxs), ctxs) == \
+            cm.decode_time(len(ctxs), ctx_sum=eff)
+        assert cm.hybrid_time([64], [32], len(ctxs), ctxs) == \
+            cm.hybrid_time([64], [32], len(ctxs), decode_ctx_sum=eff)
