@@ -1,39 +1,55 @@
 """Paper Fig. 9: static coarse-grained scaling — goodput vs #instances.
 The paper reports SUPERLINEAR P90 scaling (5.6x from 1 -> 4 instances for
 CodeLlama-34B): more instances give rolling activation more room to
-separate phases."""
+separate phases.
+
+The sweep is one ``ExperimentRunner`` grid with ``n_instances`` as an
+axis (mode="goodput": each cell binary-searches its own frontier rate in
+the worker), replacing the old standalone per-count loop — the same
+unified runner that drives the scenario/tenant grids, so cell seeds are
+CRC-pinned and the sweep parallelizes across counts.  A fixed-rate
+variant of this axis is pinned bit-exactly by
+``tests/golden/static_scaling.json`` (see ``static_scaling_runner``).
+"""
 from __future__ import annotations
 
-from benchmarks.common import QUICK_DURATION, emit, make_cost, \
-    system_factory, timed
-from repro.core.slo import DATASET_SLOS
-from repro.simulator.cost_model import GPU_L20
-from repro.simulator.metrics import goodput
-from repro.simulator.workload import WORKLOADS
+import time
+
+from benchmarks.common import QUICK_DURATION
+from repro.simulator.runner import ExperimentRunner
+
+
+def scaling_runner(counts, duration: float) -> ExperimentRunner:
+    return ExperimentRunner(
+        strategies=("ecoserve",), scenarios=("poisson",),
+        mode="goodput", target_attainment=0.9,
+        goodput_lo=0.25, goodput_hi=128.0, goodput_tol=0.10,
+        model="codellama2-34b", hw="L20", tp=4, pp=1,
+        n_instances=tuple(counts),
+        workload="sharegpt", duration=duration, base_seed=0)
 
 
 def run(quick: bool = True):
+    counts = (1, 2, 4) if quick else (1, 2, 4, 8)
     model = "codellama2-34b"
-    cost = make_cost(model, GPU_L20, tp=4)
-    slo = DATASET_SLOS["sharegpt"]
-    profile = WORKLOADS["sharegpt"]
-    counts = [1, 2, 4] if quick else [1, 2, 4, 8]
     print(f"\n== Fig 9: static scaling ({model}, ShareGPT, P90) ==")
-    out = {}
-    base = None
+    t0 = time.time()
+    results = scaling_runner(counts, QUICK_DURATION).run()
+    dt = time.time() - t0
+    assert "errors" not in results, results.get("errors")
+    grid = ExperimentRunner.grid(results)["ecoserve"]["poisson"]
+    out = {n: grid[n]["goodput"] for n in counts}
+    base = out[counts[0]] or 1e-9
     for n in counts:
-        fac = system_factory("ecoserve", cost, n, slo)
-        g, us = timed(goodput, fac, profile, slo, 0.90,
-                      duration=QUICK_DURATION, hi=128.0)
-        out[n] = g["goodput"]
-        base = base or (g["goodput"] or 1e-9)
-        ratio = g["goodput"] / base
-        print(f"  instances={n:2d}  goodput={g['goodput']:6.2f} req/s  "
-              f"({ratio:.2f}x vs 1 instance, linear would be {n}.0x)")
-        emit(f"fig9_scaling_n{n}", us, f"goodput={g['goodput']:.2f}")
+        ratio = out[n] / base
+        print(f"  instances={n:2d}  goodput={out[n]:6.2f} req/s  "
+              f"({ratio:.2f}x vs {counts[0]} instance, "
+              f"linear would be {n / counts[0]:.1f}x)")
     if out.get(4) and out.get(1):
         print(f"  scaling 1->4: {out[4] / out[1]:.2f}x "
               f"(paper: superlinear, 5.6x)")
+    print(f"  {len(results['cells'])} cells in {dt:.1f}s "
+          f"(searches ran inside pool workers)")
     return out
 
 

@@ -2,10 +2,14 @@
 
 Sweeps {EcoServe, vLLM, Sarathi, DistServe, MoonCake} x {poisson, bursty,
 diurnal, trace-replay} with the unified ``ExperimentRunner`` and prints
-one CSV row per cell.  ``--write-golden`` regenerates the deterministic
-regression fixture consumed by ``tests/test_scenarios.py``:
+one CSV row per cell.  ``--tenants`` switches to the multi-tenant grid
+(two SLO classes mixed into every cell, per-class attainment columns).
+``--stream PATH`` appends one JSONL row per finished cell (the CI
+artifact).  ``--write-golden*`` regenerate the deterministic regression
+fixtures consumed by the tier-1 tests:
 
     PYTHONPATH=src python -m benchmarks.bench_scenarios --write-golden
+    PYTHONPATH=src python -m benchmarks.bench_scenarios --write-golden-tenants
 """
 from __future__ import annotations
 
@@ -13,18 +17,22 @@ import pathlib
 import time
 
 from repro.simulator.runner import (ExperimentRunner, goodput_runner,
-                                    regression_runner)
+                                    regression_runner,
+                                    static_scaling_runner, tenant_runner)
 
 GOLDEN_DIR = (pathlib.Path(__file__).resolve().parent.parent
               / "tests" / "golden")
 GOLDEN_PATH = GOLDEN_DIR / "scenario_grid.json"
 GOODPUT_GOLDEN_PATH = GOLDEN_DIR / "goodput_frontier.json"
+TENANT_GOLDEN_PATH = GOLDEN_DIR / "tenant_grid.json"
+STATIC_GOLDEN_PATH = GOLDEN_DIR / "static_scaling.json"
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, stream: str = None) -> dict:
     runner = regression_runner() if quick else ExperimentRunner(
         scenarios=("poisson", "bursty", "diurnal", "ramp", "replay"),
         rates=(8.0, 16.0, 24.0), duration=60.0, base_seed=0)
+    runner.stream_path = stream
     t0 = time.time()
     results = runner.run()
     dt = time.time() - t0
@@ -57,11 +65,42 @@ def run_goodput() -> dict:
     return results
 
 
+def run_tenants(stream: str = None) -> dict:
+    """The multi-tenant grid: per-class attainment columns per cell."""
+    runner = tenant_runner()
+    runner.stream_path = stream
+    t0 = time.time()
+    results = runner.run()
+    dt = time.time() - t0
+    classes = results["meta"]["tenants"]
+    print("strategy,scenario,rate,attainment,attainment_min,"
+          + ",".join(f"att_{c}" for c in classes))
+    for cell in results["cells"]:
+        m = cell.get("metrics", {})
+        by_class = m.get("attainment_by_class", {})
+        print(f"{cell['strategy']},{cell['scenario']},{cell['rate']},"
+              f"{m.get('attainment', 0):.4f},"
+              f"{m.get('attainment_min', 0):.4f},"
+              + ",".join(f"{by_class.get(c, 0):.4f}" for c in classes))
+    print(f"\n{len(results['cells'])} tenant cells in {dt:.1f}s")
+    return results
+
+
 def write_golden() -> None:
     results = regression_runner().run()
     GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
     ExperimentRunner.save(results, GOLDEN_PATH)
     print(f"wrote {len(results['cells'])} cells to {GOLDEN_PATH}")
+
+
+def write_tenant_golden() -> None:
+    GOLDEN_DIR.mkdir(parents=True, exist_ok=True)
+    results = tenant_runner().run()
+    ExperimentRunner.save(results, TENANT_GOLDEN_PATH)
+    print(f"wrote {len(results['cells'])} cells to {TENANT_GOLDEN_PATH}")
+    results = static_scaling_runner().run()
+    ExperimentRunner.save(results, STATIC_GOLDEN_PATH)
+    print(f"wrote {len(results['cells'])} cells to {STATIC_GOLDEN_PATH}")
 
 
 def write_goodput_golden() -> None:
@@ -78,16 +117,29 @@ if __name__ == "__main__":
     ap.add_argument("--goodput", action="store_true",
                     help="run the goodput-frontier grid instead of the "
                          "fixed-rate sweep")
+    ap.add_argument("--tenants", action="store_true",
+                    help="run the multi-tenant SLO-class grid "
+                         "(per-class attainment columns)")
+    ap.add_argument("--stream", default=None, metavar="PATH",
+                    help="append one JSONL row per finished cell "
+                         "(interrupt recovery / CI artifact)")
     ap.add_argument("--write-golden", action="store_true",
                     help="regenerate tests/golden/scenario_grid.json")
     ap.add_argument("--write-golden-goodput", action="store_true",
                     help="regenerate tests/golden/goodput_frontier.json")
+    ap.add_argument("--write-golden-tenants", action="store_true",
+                    help="regenerate tests/golden/tenant_grid.json and "
+                         "tests/golden/static_scaling.json")
     args = ap.parse_args()
     if args.write_golden:
         write_golden()
     elif args.write_golden_goodput:
         write_goodput_golden()
+    elif args.write_golden_tenants:
+        write_tenant_golden()
+    elif args.tenants:
+        run_tenants(stream=args.stream)
     elif args.goodput:
         run_goodput()
     else:
-        run(quick=not args.full)
+        run(quick=not args.full, stream=args.stream)

@@ -44,7 +44,14 @@ STRATEGIES: Tuple[str, ...] = tuple(_REGISTRY)
 
 
 def make_system(name: str, cost, n_instances: int, slo=None, **kw):
-    """Construct a serving system by strategy name."""
+    """Construct a serving system by strategy name.
+
+    ``slo`` may be a bare ``SLO`` or a multi-tenant ``SLOClassSet``
+    (``repro.core.slo``): EcoServe routes each request against its own
+    class budgets; the NoDG/FuDG baselines schedule SLO-blind either way
+    (their policies never read it), but their results are still scored
+    per class by the metrics layer.
+    """
     if name not in _REGISTRY:
         raise KeyError(f"unknown strategy {name!r}; "
                        f"expected one of {STRATEGIES}")

@@ -4,6 +4,12 @@ Given an instance's status and an incoming request, verify that admitting
 the request violates neither the TTFT SLO (constraint 1), the TPOT SLO of
 the decodes already running there (constraint 2), nor the KV-cache memory
 capacity (constraint 3).
+
+Multi-tenant note: ``slo`` is the budget the INCOMING request is checked
+against — under an ``SLOClassSet`` the router passes the request's own
+class SLO here, and ``status.saved_tpots`` already accrues each running
+decode's slack against that decode's own class TPOT (see
+``Instance.status``), so constraint 2 stays per-tenant consistent.
 """
 from __future__ import annotations
 
@@ -47,8 +53,13 @@ def check_constraints(
                 return False
     # 2b: the request's own decode joins the batch — the projected decode
     # iteration time must stay within the TPOT SLO ("prioritizing the
-    # maintenance of satisfactory TPOT", §3.4)
-    if status.decode_iter_time_plus_one > slo.tpot:
+    # maintenance of satisfactory TPOT", §3.4).  The budget is the
+    # tighter of the incoming request's class TPOT and the strictest
+    # budget among decodes already running (``decode_tpot_floor``): a
+    # lax-class admission must not slow the shared decode batch past a
+    # tight-class tenant's SLO.  Single-class mode: floor == slo.tpot.
+    if status.decode_iter_time_plus_one > min(slo.tpot,
+                                              status.decode_tpot_floor):
         return False
 
     # ---- Constraint 3: KV cache capacity ------------------------------ #

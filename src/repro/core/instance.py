@@ -25,9 +25,12 @@ the cached next-prefill-batch plan.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Protocol, Tuple
+from typing import TYPE_CHECKING, List, Optional, Protocol, Tuple
 
 from repro.core.request import Request, RequestState
+
+if TYPE_CHECKING:
+    from repro.core.slo import SLOClassSet
 
 
 class ExecutorModel(Protocol):
@@ -57,6 +60,10 @@ class InstanceStatus:
     # projected decode iteration time if one more request joins the batch
     # (guards TPOT against unbounded decode-batch growth)
     decode_iter_time_plus_one: float = 0.0
+    # tightest TPOT budget among the decodes already running here (the
+    # scalar instance SLO in single-class mode): admission must not slow
+    # the shared decode batch past the strictest running tenant's budget
+    decode_tpot_floor: float = float("inf")
 
     @property
     def kv_tokens_free(self) -> int:
@@ -77,7 +84,8 @@ class Instance:
                  slo_tpot: Optional[float] = None,
                  slo_ttft: Optional[float] = None,
                  conservative_slack: bool = False,
-                 chunked_fallback: int = 0):
+                 chunked_fallback: int = 0,
+                 slo_classes: Optional["SLOClassSet"] = None):
         self.iid = iid
         self.executor = executor
         self.kv_capacity_tokens = kv_capacity_tokens
@@ -89,6 +97,13 @@ class Instance:
         # the guard (NoDG baselines are strictly prefill-prioritized).
         self.slo_tpot = slo_tpot
         self.slo_ttft = slo_ttft
+        # Multi-tenant SLO classes: when a heterogeneous class set is
+        # attached, the slack guard and status report score every request
+        # against ITS OWN class budget.  A single-class (or absent) set
+        # keeps the scalar slo_tpot/slo_ttft code paths, bit-identically.
+        self.slo_classes = slo_classes
+        self._multi_slo = (slo_classes is not None
+                           and not slo_classes.is_single)
         self.conservative_slack = conservative_slack  # EcoServe++ (min slack)
         # EcoServe-CP (beyond-paper): when decode slack is too thin for a
         # full prefill slot, ride `chunked_fallback` prefill tokens along
@@ -115,6 +130,7 @@ class Instance:
         self._version = 0              # bumped on any mutation
         self._status_cache = None      # ((now, slo, version), status)
         self._prefill_plan_cache = None  # (version, (batch, lens, dur, old))
+        self._starve_deadline_cache = None  # (version, deadline) multi-SLO
 
     # ----------------------------------------------------------------- #
     # mutators: the ONLY legal way to change pending/decoding membership
@@ -208,8 +224,11 @@ class Instance:
     def status(self, now: float, slo_tpot: float) -> InstanceStatus:
         # memoized per (now, slo, version): Algorithm 1 probes every
         # instance for every queued request at each slot boundary, and
-        # every mutator bumps _version — stale entries are impossible
-        key = (now, slo_tpot, self._version)
+        # every mutator bumps _version — stale entries are impossible.
+        # In multi-SLO mode _status ignores the scalar slo_tpot (each
+        # decode uses its own class budget), so the key normalizes it —
+        # interleaved-class dispatch must not thrash the one-entry cache
+        key = (now, None if self._multi_slo else slo_tpot, self._version)
         cached = self._status_cache
         if cached is not None and cached[0] == key:
             return cached[1]
@@ -225,17 +244,28 @@ class Instance:
         else:
             ctxs = [r.kv_tokens() for r in self.decoding][: n_next - 1]
             dit = self.executor.decode_time(n_next, ctxs + [512])
+        if self._multi_slo:
+            # each decode's slack accrues against its OWN class's TPOT
+            classes = self.slo_classes
+            tpots = [classes.for_request(r).tpot for r in self.decoding]
+            saved = [r.saved_tpot(now, t)
+                     for r, t in zip(self.decoding, tpots)]
+            floor = min(tpots) if tpots else float("inf")
+        else:
+            saved = [r.saved_tpot(now, slo_tpot) for r in self.decoding]
+            floor = slo_tpot if slo_tpot is not None else float("inf")
         return InstanceStatus(
             iid=self.iid,
             phase=self.phase,
             pending_prefill_lens=[r.prompt_len for r in self.pending],
             pending_prefill_tokens=self._pending_tokens,
             num_decoding=len(self.decoding),
-            saved_tpots=[r.saved_tpot(now, slo_tpot) for r in self.decoding],
+            saved_tpots=saved,
             kv_tokens_used=self.kv_tokens_used(),
             kv_tokens_capacity=self.kv_capacity_tokens,
             last_switch_time=self.last_switch_time,
             decode_iter_time_plus_one=dit,
+            decode_tpot_floor=floor,
         )
 
     # ----------------------------------------------------------------- #
@@ -335,12 +365,46 @@ class Instance:
         run), cached until the pending set changes."""
         if self.slo_tpot is None or not self.decoding:
             return True
+        if self._multi_slo:
+            return self._slack_allows_prefill_per_class(now)
         _, _, dur, oldest = self._prefill_plan()
         # anti-starvation: a pending prefill nearing its TTFT budget wins
         if self.slo_ttft is not None:
             if now - oldest + dur > 0.6 * self.slo_ttft:
                 return True
         saved = [r.saved_tpot(now, self.slo_tpot) for r in self.decoding]
+        slack = min(saved) if self.conservative_slack else (
+            sum(saved) / len(saved))
+        return slack >= dur
+
+    def _starvation_deadline(self) -> float:
+        """Earliest anti-starvation deadline over the pending set:
+        min(arrival + 0.6 * own-class TTFT).  Depends only on pending
+        membership, so it is cached per mutation version like the
+        prefill plan — the per-class guard stays O(1) per probe instead
+        of rescanning the queue at every slot decision."""
+        cached = self._starve_deadline_cache
+        if cached is not None and cached[0] == self._version:
+            return cached[1]
+        classes = self.slo_classes
+        deadline = min(
+            (r.arrival_time + 0.6 * classes.for_request(r).ttft
+             for r in self.pending), default=float("inf"))
+        self._starve_deadline_cache = (self._version, deadline)
+        return deadline
+
+    def _slack_allows_prefill_per_class(self, now: float) -> bool:
+        """Multi-tenant form of the guard: the anti-starvation check uses
+        each pending request's OWN TTFT budget (a tight-class prefill can
+        force the switch while a lax-class one keeps waiting), and decode
+        slack accrues against each decode's OWN TPOT budget."""
+        classes = self.slo_classes
+        _, _, dur, _ = self._prefill_plan()
+        # some pending prefill past 60% of its own TTFT budget wins
+        if now + dur > self._starvation_deadline():
+            return True
+        saved = [r.saved_tpot(now, classes.for_request(r).tpot)
+                 for r in self.decoding]
         slack = min(saved) if self.conservative_slack else (
             sum(saved) / len(saved))
         return slack >= dur

@@ -8,21 +8,26 @@ hand-off IS the rolling activation (the paper's Fig. 5 step 2).
 """
 from __future__ import annotations
 
-from typing import Callable, List, Optional
+from typing import Callable, List, Optional, Union
 
 from repro.core.constraints import check_constraints
 from repro.core.instance import Instance
 from repro.core.request import Request
-from repro.core.slo import SLO
+from repro.core.slo import SLO, SLOClassSet, as_slo_class_set
 
 
 class MacroInstance:
-    def __init__(self, mid: int, instances: List[Instance], slo: SLO,
+    def __init__(self, mid: int, instances: List[Instance],
+                 slo: Union[SLO, SLOClassSet],
                  predict_prefill: Callable[[int], float],
                  conservative: bool = False):
         self.mid = mid
         self.instances: List[Instance] = list(instances)
-        self.slo = slo
+        # accept a bare SLO (legacy single-tenant callers) or a class set;
+        # routing always resolves the REQUEST's class (Algorithm 1 becomes
+        # SLO-aware: constraints check against the request's own budgets)
+        self.slo_set = as_slo_class_set(slo)
+        self.slo = self.slo_set.default_slo
         self.predict_prefill = predict_prefill
         self.conservative = conservative       # EcoServe++ admission
         self._active_idx = 0      # sticky pointer (Algorithm 1 line 2)
@@ -37,11 +42,12 @@ class MacroInstance:
         n = len(self.instances)
         if n == 0:
             return None
+        slo = self.slo_set.for_request(req)
         for k in range(n):
             idx = (self._active_idx + k) % n
             inst = self.instances[idx]
-            status = inst.status(now, self.slo.tpot)
-            if check_constraints(status, req, self.slo,
+            status = inst.status(now, slo.tpot)
+            if check_constraints(status, req, slo,
                                  self.predict_prefill, now,
                                  conservative=self.conservative):
                 self._active_idx = idx

@@ -25,7 +25,7 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.core.instance import Instance
 from repro.core.macro import MacroInstance
 from repro.core.request import Request
-from repro.core.slo import SLO
+from repro.core.slo import SLO, SLOClassSet, as_slo_class_set
 
 # process-local registry standing in for the RPC actor table: handlers
 # resolve their instance through it after deserialization, which is what
@@ -74,11 +74,15 @@ class OverallScheduler:
     """Top-level scheduler: dispatches to macro instances and runs the
     mitosis expansion/contraction state machine."""
 
-    def __init__(self, slo: SLO, predict_prefill: Callable[[int], float],
+    def __init__(self, slo, predict_prefill: Callable[[int], float],
                  n_lower: int = 4, n_upper: int = 16,
                  conservative: bool = False):
+        """``slo`` is a bare ``SLO`` or a multi-tenant ``SLOClassSet``;
+        dispatch hands the class set down to every macro instance so each
+        request is admitted against its own class budgets."""
         assert 1 <= n_lower <= n_upper
-        self.slo = slo
+        self.slo_set: SLOClassSet = as_slo_class_set(slo)
+        self.slo: SLO = self.slo_set.default_slo
         self.predict_prefill = predict_prefill
         self.n_lower = n_lower
         self.n_upper = n_upper
@@ -100,7 +104,7 @@ class OverallScheduler:
 
     # ---------------- expansion --------------------------------------- #
     def new_macro(self, instances: List[Instance]) -> MacroInstance:
-        m = MacroInstance(self._next_mid, instances, self.slo,
+        m = MacroInstance(self._next_mid, instances, self.slo_set,
                           self.predict_prefill,
                           conservative=self.conservative)
         self._next_mid += 1

@@ -15,18 +15,23 @@ from repro.core.instance import Instance
 from repro.core.macro import MacroInstance
 from repro.core.mitosis import OverallScheduler, register_instance
 from repro.core.request import Request
-from repro.core.slo import SLO
+from repro.core.slo import SLO, as_slo_class_set
 from repro.simulator.cost_model import InstanceCostModel
 from repro.simulator.engine import SimulationEngine
 
 
 class EcoServeSystem:
-    def __init__(self, cost: InstanceCostModel, n_instances: int, slo: SLO,
+    def __init__(self, cost: InstanceCostModel, n_instances: int, slo,
                  n_lower: int = 4, n_upper: int = 16,
                  queue_timeout_factor: float = 4.0,
                  plus_plus: bool = False,
                  chunked_fallback: int = 0):
-        """``plus_plus`` enables the beyond-paper EcoServe++ admission:
+        """``slo`` is a bare ``SLO`` or a multi-tenant ``SLOClassSet``;
+        with a class set, admission/routing/slack all run against each
+        request's own class budgets (single-class sets are bit-identical
+        to the scalar path).
+
+        ``plus_plus`` enables the beyond-paper EcoServe++ admission:
         min-slack (instead of mean-slack) in Constraint 2 and in the
         intra-instance switch guard — protects young decodes.
 
@@ -34,12 +39,13 @@ class EcoServeSystem:
         when slack is too thin for a full prefill slot, that many prefill
         tokens ride along with each decode iteration."""
         self.cost = cost
-        self.slo = slo
+        self.slo_set = as_slo_class_set(slo)
+        self.slo: SLO = self.slo_set.default_slo
         self.plus_plus = plus_plus
         self.chunked_fallback = chunked_fallback
         self.sched = OverallScheduler(
-            slo, cost.predict_prefill, n_lower=n_lower, n_upper=n_upper,
-            conservative=plus_plus)
+            self.slo_set, cost.predict_prefill, n_lower=n_lower,
+            n_upper=n_upper, conservative=plus_plus)
         self.instances: List[Instance] = []
         for i in range(n_instances):
             inst = self._make_instance(i)
@@ -54,7 +60,8 @@ class EcoServeSystem:
             iid, self.cost, kv_capacity_tokens=self.cost.kv_capacity_tokens(),
             slo_tpot=self.slo.tpot, slo_ttft=self.slo.ttft,
             conservative_slack=self.plus_plus,
-            chunked_fallback=self.chunked_fallback)
+            chunked_fallback=self.chunked_fallback,
+            slo_classes=self.slo_set)
         register_instance(inst)
         return inst
 
@@ -79,8 +86,10 @@ class EcoServeSystem:
             if inst is not None:
                 return inst
         # SLO unreachable for this request: admit anyway once it has
-        # waited too long (completes, counted as violation)
-        if now - req.arrival_time > self.queue_timeout_factor * self.slo.ttft:
+        # waited too long against ITS OWN class's TTFT budget (completes,
+        # counted as violation)
+        ttft = self.slo_set.for_request(req).ttft
+        if now - req.arrival_time > self.queue_timeout_factor * ttft:
             return self.sched.macros[0].route_forced(req, now)
         return None
 

@@ -20,6 +20,10 @@ class Request:
     prompt_len: int
     output_len: int                      # ground-truth generation length;
                                          # schedulers never read it directly
+    # multi-tenant tag: which SLO class this request is scored against
+    # (see ``repro.core.slo.SLOClassSet``); single-tenant runs leave it at
+    # DEFAULT_SLO_CLASS and behave exactly as before
+    slo_class: str = "default"
     state: RequestState = RequestState.QUEUED
 
     # --- runtime bookkeeping -------------------------------------------- #

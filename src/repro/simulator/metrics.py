@@ -1,10 +1,21 @@
 """Goodput measurement: max request rate sustaining an SLO-attainment
-percentile (the paper's Fig. 8 metric)."""
+percentile (the paper's Fig. 8 metric).
+
+Multi-tenant contract: when ``slo`` is a heterogeneous ``SLOClassSet``,
+``run_once`` scores every request against its OWN class budget and
+additionally reports the per-class attainment grid plus the
+min-over-classes scalar, and ``goodput`` bisects on that minimum — the
+frontier is capped by the WORST-served tenant, so a strategy cannot buy
+aggregate attainment by starving one class (the "Inference without
+Interference" measurement discipline).  Single-class sets are
+bit-identical to passing the bare ``SLO``.
+"""
 from __future__ import annotations
 
 from typing import Callable, Dict
 
-from repro.core.slo import SLO, attainment, percentile_latencies
+from repro.core.slo import (SLO, as_slo_class_set, attainment,
+                            attainment_summary, percentile_latencies)
 from repro.simulator.engine import SimulationEngine
 from repro.simulator.workload import WorkloadGen, WorkloadProfile
 
@@ -28,15 +39,23 @@ def as_scenario(workload, rate: float, seed: int):
 
 
 def run_once(system_factory: Callable[[], object], workload,
-             rate: float, slo: SLO, duration: float = 240.0,
+             rate: float, slo, duration: float = 240.0,
              warmup: float = None, seed: int = 0) -> Dict[str, float]:
+    """One simulation at a fixed rate.  ``slo`` is a bare ``SLO`` or an
+    ``SLOClassSet``; a heterogeneous set adds ``attainment_by_class``
+    (per-class grid) and ``attainment_min`` (worst class) to the row."""
     system = system_factory()
     warmup = duration * 0.15 if warmup is None else min(warmup,
                                                         duration * 0.5)
+    classes = as_slo_class_set(slo)
     gen = as_scenario(workload, rate, seed)
     # a prebuilt scenario carries its own rate; report that one so a
     # mismatched ``rate`` argument can't mislabel the result row
-    rate = getattr(getattr(gen, "arrivals", None), "rate", rate)
+    scen_rate = getattr(getattr(gen, "arrivals", None), "rate", None)
+    if scen_rate is None:
+        scen_rate = getattr(gen, "rate", None)  # MixedScenario/WorkloadGen
+    if scen_rate is not None:
+        rate = scen_rate
     reqs = gen.generate(duration)
     engine = SimulationEngine(system)
     # allow in-flight work to drain past the arrival window
@@ -46,10 +65,26 @@ def run_once(system_factory: Callable[[], object], workload,
     if not submitted:            # vacuously fine at negligible rates
         return {"rate": rate, "attainment": 1.0, "completion": 1.0,
                 "finished": 0.0}
-    att = attainment(scored, slo)
+    if classes.is_single:
+        att = attainment(scored, classes.default_slo)
+        per_class = None
+    else:
+        att, per_class = attainment_summary(scored, classes)
+        # the min ranges over classes that SUBMITTED post-warmup traffic:
+        # a class that drew no arrivals is vacuously fine (matching the
+        # single-class "not submitted" branch above), not starved — else
+        # low-rate goodput probes would report 0.0 on empty classes.  A
+        # class with submitted-but-unfinished requests still scores 0.0.
+        known = set(classes.names)
+        active = {r.slo_class if r.slo_class in known else classes.default
+                  for r in submitted}
+        att_min = min(per_class[c] for c in active)
     completion = len(scored) / max(1, len(submitted))
     out = {"rate": rate, "attainment": att, "completion": completion,
            "finished": float(len(scored))}
+    if per_class is not None:
+        out["attainment_by_class"] = per_class
+        out["attainment_min"] = att_min
     out.update(percentile_latencies(scored))
     return out
 
@@ -63,6 +98,10 @@ def goodput(system_factory, workload, slo, target_attainment: float,
     Unfinished requests count against attainment via the completion factor.
     ``workload`` is a ``WorkloadProfile`` or a ``(rate, seed) -> scenario``
     factory (a fixed scenario has no rate knob to search over).
+
+    Under a heterogeneous ``SLOClassSet`` the search criterion is the
+    MIN-over-classes attainment: every class must meet the target at the
+    reported rate, so one starved tenant caps the frontier.
     Returns {goodput, attainment_at_goodput, probes, ...}."""
     if not isinstance(workload, WorkloadProfile) and \
             hasattr(workload, "generate"):
@@ -77,7 +116,10 @@ def goodput(system_factory, workload, slo, target_attainment: float,
         probes += 1
         m = run_once(system_factory, workload, rate, slo,
                      duration=duration, warmup=warmup, seed=seed)
-        return m["attainment"] * min(1.0, m["completion"] + 1e-9) \
+        # multi-class rows carry attainment_min; single-class rows reduce
+        # to the scalar attainment (bit-identical legacy criterion)
+        score = m.get("attainment_min", m["attainment"])
+        return score * min(1.0, m["completion"] + 1e-9) \
             >= target_attainment
 
     if not ok(lo):
@@ -92,8 +134,12 @@ def goodput(system_factory, workload, slo, target_attainment: float,
             hi = mid
     final = run_once(system_factory, workload, lo, slo,
                      duration=duration, warmup=warmup, seed=seed + 1)
-    return {"goodput": lo, "target": target_attainment,
-            "probes": float(probes),
-            "attainment": final["attainment"], **{
-                k: v for k, v in final.items()
-                if k.startswith(("ttft", "tpot"))}}
+    out = {"goodput": lo, "target": target_attainment,
+           "probes": float(probes),
+           "attainment": final["attainment"], **{
+               k: v for k, v in final.items()
+               if k.startswith(("ttft", "tpot"))}}
+    for k in ("attainment_by_class", "attainment_min"):
+        if k in final:
+            out[k] = final[k]
+    return out

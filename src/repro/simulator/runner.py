@@ -21,6 +21,19 @@ Two per-cell modes:
   simulator hot path is fast enough to run the ~10 probe simulations a
   search needs inside a single worker.
 
+Two more grid axes (both seed-disambiguated through ``cell_seed``'s
+``extra`` component, so legacy single-axis grids keep their historical
+seeds):
+
+* ``tenants=("alpaca", "longbench")`` — every cell becomes a
+  multi-tenant ``MixedScenario`` with one equal-share stream per listed
+  Table 4 workload, tagged with that workload name as its ``slo_class``
+  and scored against its own SLO; rows carry ``attainment_by_class`` and
+  ``attainment_min``, and goodput mode bisects on the min-over-classes
+  attainment (one starved tenant caps the frontier).
+* ``n_instances=(1, 2, 4)`` — the instance count as a grid axis (Fig. 9
+  static scaling, folded from the old standalone bench loop).
+
 Cells run through ``imap_unordered`` with per-cell error capture: a
 crashing cell yields a row carrying its spec and the error string instead
 of poisoning the whole ``pool.map``.  Pass ``stream_path`` to append one
@@ -34,21 +47,26 @@ import json
 import multiprocessing
 import traceback
 import zlib
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.configs import get_config
-from repro.core.slo import DATASET_SLOS
+from repro.core.slo import DATASET_SLOS, SLOClassSet
 from repro.simulator.cost_model import (GPU_A800, GPU_L20, TPU_V5E_SIM,
                                         InstanceCostModel)
 from repro.simulator.metrics import goodput, run_once
-from repro.simulator.scenarios import SCENARIO_KINDS, make_scenario
+from repro.simulator.scenarios import (SCENARIO_KINDS, make_mixed_scenario,
+                                       make_scenario)
 
 HARDWARE = {"L20": GPU_L20, "A800": GPU_A800, "tpu-v5e": TPU_V5E_SIM}
 
-# metrics kept in the persisted grid (attainment + tail latency summary)
-SUMMARY_KEYS = ("attainment", "completion", "finished",
+# metrics kept in the persisted grid (attainment + tail latency summary;
+# the *_by_class / *_min keys appear only on multi-tenant cells, so
+# single-class golden grids keep their legacy rows)
+SUMMARY_KEYS = ("attainment", "attainment_min", "attainment_by_class",
+                "completion", "finished",
                 "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
 GOODPUT_SUMMARY_KEYS = ("goodput", "target", "probes", "attainment",
+                        "attainment_min", "attainment_by_class",
                         "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
 
 # runner fields that parameterize the goodput search; excluded from the
@@ -58,9 +76,14 @@ _GOODPUT_FIELDS = ("mode", "target_attainment", "goodput_lo", "goodput_hi",
 
 
 def cell_seed(base_seed: int, strategy: str, scenario: str,
-              rate: float) -> int:
-    """Deterministic per-cell seed, stable across processes and runs."""
+              rate: float, extra: str = "") -> int:
+    """Deterministic per-cell seed, stable across processes and runs.
+    ``extra`` disambiguates additional grid axes (tenant mixes, swept
+    instance counts); an empty ``extra`` reproduces the historical seed
+    for every pre-existing golden cell."""
     key = f"{strategy}|{scenario}|{rate:.6f}".encode()
+    if extra:
+        key += f"|{extra}".encode()
     return (zlib.crc32(key) ^ (base_seed * 2654435761)) & 0x7FFFFFFF
 
 
@@ -74,7 +97,13 @@ def _run_cell(spec: Dict) -> Dict:
     cost = InstanceCostModel(cfg=get_config(spec["model"]),
                              hw=HARDWARE[spec["hw"]],
                              tp=spec["tp"], pp=spec["pp"])
-    slo = DATASET_SLOS[spec["workload"]]
+    tenants = spec.get("tenants")
+    if tenants:
+        # one SLO class per tenant workload (Table 4 budgets); requests
+        # are tagged by MixedScenario and scored per class
+        slo = SLOClassSet.make({w: DATASET_SLOS[w] for w in tenants})
+    else:
+        slo = DATASET_SLOS[spec["workload"]]
 
     def factory():
         return make_system(spec["strategy"], cost, spec["n_instances"], slo)
@@ -82,8 +111,12 @@ def _run_cell(spec: Dict) -> Dict:
     if spec.get("mode") == "goodput":
         # rate knob stays live inside the search: each probe regenerates
         # the scenario at the probed rate under the cell's fixed seed
-        scen_factory = functools.partial(make_scenario, spec["scenario"],
-                                         spec["workload"])
+        if tenants:
+            scen_factory = functools.partial(
+                make_mixed_scenario, spec["scenario"], tenants)
+        else:
+            scen_factory = functools.partial(
+                make_scenario, spec["scenario"], spec["workload"])
         g = goodput(factory, scen_factory, slo,
                     target_attainment=spec["target_attainment"],
                     lo=spec["goodput_lo"], hi=spec["goodput_hi"],
@@ -92,8 +125,12 @@ def _run_cell(spec: Dict) -> Dict:
         summary = {k: g[k] for k in GOODPUT_SUMMARY_KEYS if k in g}
         return {**spec, "metrics": summary}
 
-    scenario = make_scenario(spec["scenario"], spec["workload"],
-                             spec["rate"], seed=spec["seed"])
+    if tenants:
+        scenario = make_mixed_scenario(spec["scenario"], tenants,
+                                       spec["rate"], seed=spec["seed"])
+    else:
+        scenario = make_scenario(spec["scenario"], spec["workload"],
+                                 spec["rate"], seed=spec["seed"])
     metrics = run_once(factory, scenario, spec["rate"], slo,
                        duration=spec["duration"], warmup=spec["warmup"],
                        seed=spec["seed"])
@@ -125,8 +162,15 @@ class ExperimentRunner:
     hw: str = "L20"
     tp: int = 4
     pp: int = 1
-    n_instances: int = 8
+    # a bare int (legacy) or a sequence: a sequence makes the instance
+    # count a grid axis (Fig. 9 static scaling folded into the runner)
+    n_instances: Union[int, Sequence[int]] = 8
     workload: str = "sharegpt"
+    # multi-tenant mode: tenant workload names (Table 4); each cell runs a
+    # MixedScenario with one equal-share tenant stream per name, tagged
+    # with that name as its slo_class, scored against DATASET_SLOS per
+    # class.  None = legacy single-class cells (``workload`` applies).
+    tenants: Optional[Sequence[str]] = None
     duration: float = 60.0
     warmup: Optional[float] = None
     base_seed: int = 0
@@ -147,11 +191,32 @@ class ExperimentRunner:
         if self.mode not in ("fixed", "goodput"):
             raise ValueError(f"unknown mode {self.mode!r}; "
                              "expected 'fixed' or 'goodput'")
+        if self.tenants is not None and len(self.tenants) == 0:
+            raise ValueError("tenants must be None or a non-empty sequence")
+
+    # ---- grid axes ---------------------------------------------------- #
+    def _instance_counts(self) -> Tuple[int, ...]:
+        if isinstance(self.n_instances, int):
+            return (self.n_instances,)
+        return tuple(self.n_instances)
+
+    def _seed_extra(self, n: int) -> str:
+        """Extra seed-key components for the new grid axes.  Empty for a
+        legacy single-class, single-count grid — those cells keep their
+        historical seeds and golden fixtures."""
+        parts = []
+        if self.tenants:
+            parts.append("tenants=" + "+".join(self.tenants))
+        if len(self._instance_counts()) > 1:
+            parts.append(f"n={n}")
+        return "|".join(parts)
 
     def cells(self) -> List[Dict]:
         common = dict(model=self.model, hw=self.hw, tp=self.tp, pp=self.pp,
-                      n_instances=self.n_instances, workload=self.workload,
+                      workload=self.workload,
                       duration=self.duration, warmup=self.warmup)
+        if self.tenants:
+            common["tenants"] = list(self.tenants)
         out = []
         if self.mode == "goodput":
             common.update(mode="goodput",
@@ -161,20 +226,26 @@ class ExperimentRunner:
                           goodput_tol=self.goodput_tol)
             for strat in self.strategies:
                 for scen in self.scenarios:
-                    # rate 0.0 = the search's seed sentinel: one seed per
-                    # (strategy, scenario), shared by every probe
-                    out.append({**common, "strategy": strat,
-                                "scenario": scen,
-                                "seed": cell_seed(self.base_seed, strat,
-                                                  scen, 0.0)})
+                    for n in self._instance_counts():
+                        # rate 0.0 = the search's seed sentinel: one seed
+                        # per (strategy, scenario[, axes]), shared by
+                        # every probe
+                        out.append({**common, "strategy": strat,
+                                    "scenario": scen, "n_instances": n,
+                                    "seed": cell_seed(
+                                        self.base_seed, strat, scen, 0.0,
+                                        extra=self._seed_extra(n))})
             return out
         for strat in self.strategies:
             for scen in self.scenarios:
                 for rate in self.rates:
-                    out.append({**common, "strategy": strat,
-                                "scenario": scen, "rate": rate,
-                                "seed": cell_seed(self.base_seed, strat,
-                                                  scen, rate)})
+                    for n in self._instance_counts():
+                        out.append({**common, "strategy": strat,
+                                    "scenario": scen, "rate": rate,
+                                    "n_instances": n,
+                                    "seed": cell_seed(
+                                        self.base_seed, strat, scen, rate,
+                                        extra=self._seed_extra(n))})
         return out
 
     def run(self) -> Dict:
@@ -209,6 +280,12 @@ class ExperimentRunner:
         if self.mode == "fixed":     # keep legacy golden meta stable
             for k in _GOODPUT_FIELDS:
                 meta.pop(k)
+        if self.tenants is None:     # legacy single-class grids keep the
+            meta.pop("tenants")      # pre-multi-tenant meta shape
+        else:
+            meta["tenants"] = list(self.tenants)
+        if not isinstance(self.n_instances, int):
+            meta["n_instances"] = list(self.n_instances)
         meta["strategies"] = list(self.strategies)
         meta["scenarios"] = list(self.scenarios)
         meta["rates"] = list(self.rates)
@@ -232,15 +309,28 @@ class ExperimentRunner:
     @staticmethod
     def grid(results: Dict) -> Dict[str, Dict[str, Dict[float, Dict]]]:
         """Pivot the flat cell list to [strategy][scenario][rate]
-        (fixed mode) or [strategy][scenario] (goodput mode)."""
+        (fixed mode) or [strategy][scenario] (goodput mode).  When the
+        grid sweeps ``n_instances``, one more level [n_instances] is
+        inserted after [scenario] so swept counts can't overwrite each
+        other."""
+        cells = results["cells"]
+        multi_n = len({c.get("n_instances") for c in cells}) > 1
         out: Dict[str, Dict[str, Dict]] = {}
-        for cell in results["cells"]:
+        for cell in cells:
             by_scen = out.setdefault(cell["strategy"], {})
-            if cell.get("mode") == "goodput":
-                by_scen[cell["scenario"]] = cell.get("metrics", cell)
+            leaf = cell.get("metrics", cell)
+            if multi_n:
+                by_n = by_scen.setdefault(cell["scenario"], {})
+                if cell.get("mode") == "goodput":
+                    by_n[cell["n_instances"]] = leaf
+                else:
+                    by_n.setdefault(
+                        cell["n_instances"], {})[cell["rate"]] = leaf
+            elif cell.get("mode") == "goodput":
+                by_scen[cell["scenario"]] = leaf
             else:
                 by_scen.setdefault(cell["scenario"], {})[cell["rate"]] = \
-                    cell.get("metrics", cell)
+                    leaf
         return out
 
     @staticmethod
@@ -283,4 +373,33 @@ def goodput_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
         goodput_lo=1.0, goodput_hi=24.0, goodput_tol=0.35,
         model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
         workload="sharegpt", duration=24.0, warmup=3.0,
+        base_seed=42, n_workers=n_workers)
+
+
+def tenant_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
+    """The canonical multi-tenant regression grid: two SLO classes with a
+    15x TTFT spread (alpaca 1.0 s vs longbench 15 s, Table 4) mixed into
+    every cell, across three strategies and two traffic shapes; pinned
+    bit-exactly by tests/golden/tenant_grid.json.  Every row carries the
+    per-class attainment grid plus the min-over-classes scalar."""
+    return ExperimentRunner(
+        strategies=("ecoserve", "vllm", "mooncake"),
+        scenarios=("poisson", "bursty"),
+        rates=(6.0,),
+        tenants=("alpaca", "longbench"),
+        model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
+        duration=20.0, warmup=3.0,
+        base_seed=42, n_workers=n_workers)
+
+
+def static_scaling_runner(n_workers: Optional[int] = None
+                          ) -> ExperimentRunner:
+    """Fig. 9 static scaling folded into the unified runner: the instance
+    count is a grid axis (each count gets its own CRC-derived cell seed);
+    pinned by tests/golden/static_scaling.json."""
+    return ExperimentRunner(
+        strategies=("ecoserve",), scenarios=("poisson",), rates=(6.0,),
+        n_instances=(2, 4),
+        model="llama-30b", hw="L20", tp=4, pp=1,
+        workload="sharegpt", duration=20.0, warmup=3.0,
         base_seed=42, n_workers=n_workers)

@@ -9,22 +9,30 @@ with a ``WorkloadProfile``'s length distributions; everything draws from
 one ``np.random.default_rng`` stream so a (scenario, seed, duration)
 triple is bit-exactly reproducible.
 
+``MixedScenario`` composes N tenant streams — each an
+``(arrival_process, profile, slo_class)`` triple — into one seeded,
+merge-sorted arrival sequence for multi-tenant SLO experiments (see
+``repro.core.slo.SLOClassSet``).
+
 Any generated workload can be frozen to a JSONL trace (one
-``{"arrival_time", "prompt_len", "output_len"}`` record per line) with
-``write_trace`` and replayed with ``TraceReplay`` — JSON round-trips
-Python floats exactly, so replay reproduces the original ``Request``
-stream bit-for-bit.
+``{"arrival_time", "prompt_len", "output_len"[, "slo_class"]}`` record
+per line) with ``write_trace`` and replayed with ``TraceReplay`` — JSON
+round-trips Python floats exactly, so replay reproduces the original
+``Request`` stream bit-for-bit, ``slo_class`` tags included (untagged
+legacy traces load as the default class).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import math
-from typing import Callable, Iterable, List, Sequence, Tuple, Union
+import zlib
+from typing import Callable, Iterable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.request import Request
+from repro.core.slo import DEFAULT_SLO_CLASS
 from repro.simulator.workload import (WORKLOADS, WorkloadProfile,
                                       poisson_arrival_times)
 
@@ -161,19 +169,133 @@ class Scenario:
 
 
 # --------------------------------------------------------------------- #
+# multi-tenant mixes
+# --------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant stream inside a ``MixedScenario``: its SLO-class tag,
+    length distributions, and arrival process (carrying that tenant's
+    share of the total rate)."""
+    slo_class: str
+    profile: WorkloadProfile
+    arrivals: ArrivalProcess
+
+
+def _tenant_seed(seed: int, slo_class: str) -> int:
+    """Per-tenant RNG seed derived from the tenant's IDENTITY (class tag),
+    not its position — permuting the tenant tuple cannot move any
+    tenant's stream.  Same CRC32 mixing discipline as the runner's
+    ``cell_seed`` (never Python's salted ``hash``)."""
+    return (zlib.crc32(slo_class.encode()) ^ (seed * 2654435761)) \
+        & 0x7FFFFFFF
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedScenario:
+    """N tenant streams composed into one seeded arrival sequence.
+
+    Each tenant draws from its own ``default_rng`` stream (seeded by
+    tenant identity) exactly the way ``Scenario.generate`` draws — times,
+    then input lengths, then output lengths — and the per-tenant
+    sequences are merged into one time-sorted stream (stable: equal-time
+    arrivals resolve by class name, then within-tenant order).  With a
+    SINGLE tenant the stream seeds directly from ``seed``, so the request
+    sequence is bit-identical to the equivalent ``Scenario`` (only the
+    ``slo_class`` tag differs) — single-tenant sweeps reproduce the
+    legacy golden grids exactly.
+    """
+    name: str
+    tenants: Tuple[TenantSpec, ...]
+    seed: int = 0
+
+    def __post_init__(self):
+        if not self.tenants:
+            raise ValueError("MixedScenario needs at least one tenant")
+        names = [t.slo_class for t in self.tenants]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate tenant slo_class in {names}")
+
+    @property
+    def rate(self) -> float:
+        """Total time-averaged request rate across tenants."""
+        return sum(t.arrivals.rate for t in self.tenants)
+
+    @property
+    def slo_classes(self) -> Tuple[str, ...]:
+        return tuple(sorted(t.slo_class for t in self.tenants))
+
+    def generate(self, duration: float) -> List[Request]:
+        single = len(self.tenants) == 1
+        merged: List[Tuple[float, int, int, str]] = []
+        for t in sorted(self.tenants, key=lambda t: t.slo_class):
+            tseed = self.seed if single else \
+                _tenant_seed(self.seed, t.slo_class)
+            rng = np.random.default_rng(tseed)
+            times = t.arrivals.sample(rng, duration)
+            n = len(times)
+            ins = t.profile.input_dist.sample(rng, n)
+            outs = t.profile.output_dist.sample(rng, n)
+            merged.extend(
+                (float(times[i]), int(ins[i]), int(outs[i]), t.slo_class)
+                for i in range(n))
+        # stable sort of class-ordered streams == deterministic k-way
+        # merge; rids are assigned in merged arrival order
+        merged.sort(key=lambda rec: rec[0])
+        return [
+            Request(rid=i, arrival_time=at, prompt_len=p, output_len=o,
+                    slo_class=c)
+            for i, (at, p, o, c) in enumerate(merged)
+        ]
+
+
+def make_mixed_scenario(kind: str, tenant_workloads: Sequence[str],
+                        rate: float, seed: int = 0,
+                        shares: Optional[Sequence[float]] = None,
+                        **kw) -> MixedScenario:
+    """Compose one tenant per Table 4 workload name: each tenant's
+    ``slo_class`` IS the workload name (so ``DATASET_SLOS`` supplies the
+    per-class budgets), its lengths come from that workload's profile,
+    and its arrival process is ``kind`` at ``rate * share`` (equal shares
+    by default)."""
+    if shares is None:
+        shares = [1.0 / len(tenant_workloads)] * len(tenant_workloads)
+    if len(shares) != len(tenant_workloads):
+        raise ValueError("one share per tenant workload")
+    tenants = []
+    for w, share in zip(tenant_workloads, shares):
+        scen = make_scenario(kind, w, rate * share, seed=seed, **kw)
+        if not isinstance(scen, Scenario):
+            raise TypeError(f"kind {kind!r} does not parameterize by rate "
+                            "and cannot form a tenant stream")
+        tenants.append(TenantSpec(slo_class=w, profile=scen.profile,
+                                  arrivals=scen.arrivals))
+    return MixedScenario(name=f"{kind}+{'+'.join(tenant_workloads)}",
+                         tenants=tuple(tenants), seed=seed)
+
+
+# --------------------------------------------------------------------- #
 # JSONL traces
 # --------------------------------------------------------------------- #
 
-TraceRecord = Tuple[float, int, int]   # (arrival_time, prompt_len, output_len)
+# (arrival_time, prompt_len, output_len, slo_class)
+TraceRecord = Tuple[float, int, int, str]
 
 
 def trace_lines(reqs: Iterable[Request]) -> List[str]:
-    return [
-        json.dumps({"arrival_time": r.arrival_time,
-                    "prompt_len": r.prompt_len,
-                    "output_len": r.output_len})
-        for r in reqs
-    ]
+    """One JSONL record per request.  The ``slo_class`` key is written
+    only for tagged (non-default) requests, so single-tenant traces stay
+    byte-identical to the legacy three-key format."""
+    out: List[str] = []
+    for r in reqs:
+        d = {"arrival_time": r.arrival_time,
+             "prompt_len": r.prompt_len,
+             "output_len": r.output_len}
+        if r.slo_class != DEFAULT_SLO_CLASS:
+            d["slo_class"] = r.slo_class
+        out.append(json.dumps(d))
+    return out
 
 
 def write_trace(reqs: Iterable[Request], path) -> None:
@@ -191,7 +313,9 @@ def _parse_trace(lines: Iterable[str]) -> Tuple[TraceRecord, ...]:
             continue
         d = json.loads(line)
         records.append((float(d["arrival_time"]), int(d["prompt_len"]),
-                        int(d["output_len"])))
+                        int(d["output_len"]),
+                        # untagged legacy JSONL loads as the default class
+                        str(d.get("slo_class", DEFAULT_SLO_CLASS))))
     return tuple(records)
 
 
@@ -204,11 +328,11 @@ class TraceReplay:
 
     def generate(self, duration: float = None) -> List[Request]:
         reqs: List[Request] = []
-        for i, (t, plen, olen) in enumerate(self.records):
+        for i, (t, plen, olen, cls) in enumerate(self.records):
             if duration is not None and t >= duration:
                 continue
             reqs.append(Request(rid=i, arrival_time=t, prompt_len=plen,
-                                output_len=olen))
+                                output_len=olen, slo_class=cls))
         return reqs
 
     @staticmethod

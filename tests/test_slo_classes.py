@@ -1,0 +1,227 @@
+"""Unit tests for the multi-tenant SLO layer: ``SLOClassSet`` semantics,
+``attainment_by_class`` edge cases, the per-class ``run_once`` columns,
+and the min-over-classes goodput contract (one starved tenant caps the
+frontier).
+"""
+import functools
+
+import pytest
+
+from repro.baselines import make_system
+from repro.configs import get_config
+from repro.core.request import Request
+from repro.core.slo import (DATASET_SLOS, DEFAULT_SLO_CLASS, SLO,
+                            SLOClassSet, as_slo_class_set, attainment,
+                            attainment_by_class, attainment_mixed)
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.simulator.metrics import goodput, run_once
+from repro.simulator.scenarios import make_mixed_scenario
+
+TIGHT = SLO(ttft=1.0, tpot=0.05)
+LOOSE = SLO(ttft=30.0, tpot=1.0)
+
+
+def _req(rid, cls, ttft=0.5, n_tokens=5, tpot=0.01, finished=True):
+    """A finished request with the given realized TTFT/TPOT."""
+    r = Request(rid=rid, arrival_time=0.0, prompt_len=10,
+                output_len=n_tokens, slo_class=cls)
+    r.first_token_time = ttft
+    r.tokens_generated = n_tokens
+    if n_tokens >= 2:
+        r.second_token_time = ttft + tpot
+    if finished:
+        r.finish_time = ttft + tpot * max(0, n_tokens - 1)
+    return r
+
+
+# --------------------------------------------------------------------- #
+# SLOClassSet semantics
+# --------------------------------------------------------------------- #
+def test_class_set_construction_and_lookup():
+    cs = SLOClassSet.make({"a": TIGHT, "b": LOOSE}, default="b")
+    assert cs.names == ("a", "b")
+    assert not cs.is_single
+    assert cs.default_slo == LOOSE
+    assert cs.get("a") == TIGHT
+    assert cs.get("nope") == LOOSE          # unknown tag -> default class
+    assert cs.ttft == LOOSE.ttft and cs.tpot == LOOSE.tpot
+    r = Request(rid=0, arrival_time=0.0, prompt_len=1, output_len=1,
+                slo_class="a")
+    assert cs.for_request(r) == TIGHT
+
+
+def test_class_set_default_resolution():
+    # DEFAULT_SLO_CLASS wins when present; else first sorted name
+    cs = SLOClassSet.make({DEFAULT_SLO_CLASS: TIGHT, "z": LOOSE})
+    assert cs.default == DEFAULT_SLO_CLASS
+    cs2 = SLOClassSet.make({"m": TIGHT, "z": LOOSE})
+    assert cs2.default == "m"
+
+
+def test_class_set_rejects_bad_specs():
+    with pytest.raises(ValueError):
+        SLOClassSet((), "default")
+    with pytest.raises(KeyError):
+        SLOClassSet((("a", TIGHT),), "missing")
+
+
+def test_as_slo_class_set_coercion():
+    cs = as_slo_class_set(TIGHT)
+    assert cs.is_single and cs.default_slo == TIGHT
+    assert as_slo_class_set(cs) is cs
+
+
+# --------------------------------------------------------------------- #
+# attainment_by_class edge cases
+# --------------------------------------------------------------------- #
+CS = SLOClassSet.make({"a": TIGHT, "b": LOOSE}, default="a")
+
+
+def test_empty_class_reports_zero():
+    reqs = [_req(0, "a")]
+    by = attainment_by_class(reqs, CS)
+    assert set(by) == {"a", "b"}
+    assert by["b"] == 0.0                   # no traffic: scalar convention
+    assert by["a"] == 1.0
+
+
+def test_class_with_only_unfinished_requests_reports_zero():
+    reqs = [_req(0, "a"),
+            _req(1, "b", finished=False)]
+    by = attainment_by_class(reqs, CS)
+    assert by == {"a": 1.0, "b": 0.0}
+
+
+def test_single_token_requests_are_tpot_exempt():
+    # one generated token: no decode stream exists, only TTFT counts
+    ok = _req(0, "a", ttft=0.5, n_tokens=1)
+    late = _req(1, "a", ttft=5.0, n_tokens=1)
+    by = attainment_by_class([ok, late], CS)
+    assert by["a"] == 0.5
+    # a slow-decode multi-token request fails the same class's TPOT
+    slow = _req(2, "a", ttft=0.5, n_tokens=10, tpot=1.0)
+    assert attainment_by_class([ok, slow], CS)["a"] == 0.5
+
+
+def test_unknown_tag_scored_under_default_class():
+    stray = _req(0, "mystery", ttft=0.5)
+    by = attainment_by_class([stray], CS)
+    assert by["a"] == 1.0                   # bucketed into default 'a'
+    assert by["b"] == 0.0
+
+
+def test_single_class_agrees_with_scalar_attainment():
+    single = SLOClassSet.single(TIGHT, name="only")
+    reqs = [_req(i, "only", ttft=0.2 * i) for i in range(12)]
+    by = attainment_by_class(reqs, single)
+    assert list(by) == ["only"]
+    assert by["only"] == attainment(reqs, TIGHT)
+    assert attainment_mixed(reqs, single) == attainment(reqs, TIGHT)
+
+
+def test_attainment_mixed_scores_each_request_against_its_class():
+    reqs = [_req(0, "a", ttft=5.0),         # violates TIGHT
+            _req(1, "b", ttft=5.0)]         # fine under LOOSE
+    assert attainment_mixed(reqs, CS) == 0.5
+    assert attainment_by_class(reqs, CS) == {"a": 0.0, "b": 1.0}
+
+
+# --------------------------------------------------------------------- #
+# constraint 2b under heterogeneous TPOT budgets
+# --------------------------------------------------------------------- #
+def test_admission_respects_running_decodes_tpot_floor():
+    """A lax-TPOT admission must not slow the shared decode batch past a
+    tight-TPOT tenant's budget: constraint 2b checks the projected decode
+    iteration time against min(incoming class TPOT, decode_tpot_floor)."""
+    from repro.core.constraints import check_constraints
+    from repro.core.instance import InstanceStatus
+
+    def status(floor):
+        return InstanceStatus(
+            iid=0, phase="decode", pending_prefill_lens=[],
+            pending_prefill_tokens=0, num_decoding=3,
+            saved_tpots=[10.0, 10.0, 10.0],     # ample slack: 2a passes
+            kv_tokens_used=0, kv_tokens_capacity=10**6,
+            last_switch_time=0.0,
+            decode_iter_time_plus_one=0.06, decode_tpot_floor=floor)
+
+    lax = SLO(ttft=30.0, tpot=0.5)
+    req = Request(rid=0, arrival_time=0.0, prompt_len=10, output_len=5,
+                  slo_class="lax")
+    pred = lambda n: 1e-4 * n   # noqa: E731 — trivial prefill predictor
+    # tight-class decodes running (floor 0.05 < projected 0.06): reject
+    assert not check_constraints(status(0.05), req, lax, pred, now=0.0)
+    # only lax decodes running (floor 0.5): the same admission is fine
+    assert check_constraints(status(0.5), req, lax, pred, now=0.0)
+    # single-class legacy form: default floor is +inf -> only slo.tpot
+    assert check_constraints(status(float("inf")), req, lax, pred,
+                             now=0.0)
+
+
+# --------------------------------------------------------------------- #
+# metrics integration: per-class columns + min-over-classes goodput
+# --------------------------------------------------------------------- #
+COST = InstanceCostModel(cfg=get_config("llama-30b"), hw=GPU_L20, tp=4)
+MIX = ("alpaca", "longbench")
+MIX_SLOS = SLOClassSet.make({w: DATASET_SLOS[w] for w in MIX})
+
+
+def test_run_once_emits_per_class_columns_for_mixed_slo():
+    scen = make_mixed_scenario("poisson", MIX, 4.0, seed=0)
+    m = run_once(functools.partial(make_system, "ecoserve", COST, 4,
+                                   MIX_SLOS),
+                 scen, 4.0, MIX_SLOS, duration=15.0, warmup=2.0)
+    assert set(m["attainment_by_class"]) == set(MIX)
+    assert m["attainment_min"] == min(m["attainment_by_class"].values())
+    assert 0.0 <= m["attainment_min"] <= m["attainment"] <= 1.0
+
+
+def test_run_once_single_class_has_no_per_class_columns():
+    scen = make_mixed_scenario("poisson", ["sharegpt"], 4.0, seed=0)
+    slo = SLOClassSet.single(DATASET_SLOS["sharegpt"], name="sharegpt")
+    m = run_once(functools.partial(make_system, "vllm", COST, 4, slo),
+                 scen, 4.0, slo, duration=10.0, warmup=2.0)
+    assert "attainment_by_class" not in m
+    assert "attainment_min" not in m
+
+
+def test_attainment_min_ignores_classes_with_no_traffic():
+    """A class that submitted nothing is vacuously fine (matching the
+    single-class 'not submitted' convention) — the min-over-classes
+    criterion must not zero a low-rate goodput probe just because one
+    tenant drew no arrivals.  The per-class grid still reports 0.0 for
+    the empty class (the scalar-attainment empty-set convention)."""
+    class OneClassOnly:
+        rate = 2.0
+
+        def generate(self, duration):
+            return [Request(rid=i, arrival_time=3.1 + 0.1 * i,
+                            prompt_len=10, output_len=2,
+                            slo_class="alpaca") for i in range(30)]
+
+    m = run_once(functools.partial(make_system, "vllm", COST, 4, MIX_SLOS),
+                 OneClassOnly(), 2.0, MIX_SLOS, duration=15.0, warmup=2.0)
+    assert m["attainment_by_class"]["longbench"] == 0.0
+    assert m["attainment_min"] == m["attainment_by_class"]["alpaca"]
+    assert m["attainment_min"] > 0.0
+
+
+def test_goodput_is_capped_by_the_starved_class():
+    """The min-over-classes contract: a class whose SLO is unmeetable
+    zeroes the frontier even though the aggregate attainment (the other
+    class passes everything) would clear the target."""
+    factory = functools.partial(make_mixed_scenario, "poisson", MIX)
+    sys_factory = functools.partial(make_system, "vllm", COST, 4)
+    impossible = SLOClassSet.make({"alpaca": SLO(ttft=1e-9, tpot=1e-9),
+                                   "longbench": SLO(ttft=1e9, tpot=1e9)})
+    g = goodput(functools.partial(sys_factory, impossible), factory,
+                impossible, target_attainment=0.45,
+                lo=0.5, hi=4.0, tol=0.5, duration=8.0)
+    assert g["goodput"] == 0.0
+    both_easy = SLOClassSet.make({"alpaca": SLO(ttft=1e9, tpot=1e9),
+                                  "longbench": SLO(ttft=1e9, tpot=1e9)})
+    g2 = goodput(functools.partial(sys_factory, both_easy), factory,
+                 both_easy, target_attainment=0.45,
+                 lo=0.5, hi=4.0, tol=0.5, duration=8.0)
+    assert g2["goodput"] > 0.0
+    assert set(g2["attainment_by_class"]) == set(MIX)

@@ -1,0 +1,143 @@
+"""Deterministic regression layer for the multi-tenant SLO-class stack.
+
+``tests/golden/tenant_grid.json`` pins the per-class attainment grid for
+2 SLO classes x 3 strategies x 2 traffic shapes bit-exactly;
+``tests/golden/static_scaling.json`` pins the ``n_instances`` grid axis
+(Fig. 9 folded into the unified runner).  Regenerate both (after an
+*intentional* change) with:
+
+    PYTHONPATH=src python -m benchmarks.bench_scenarios --write-golden-tenants
+
+The single-tenant equivalence tests at the bottom are the no-RNG-drift
+guarantee: a one-tenant ``MixedScenario`` + single-class ``SLOClassSet``
+must reproduce the legacy ``scenario_grid.json`` rows bit-exactly.
+"""
+import functools
+import json
+import pathlib
+
+import pytest
+
+from repro.baselines import make_system
+from repro.configs import get_config
+from repro.core.slo import DATASET_SLOS, SLOClassSet
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.simulator.metrics import run_once
+from repro.simulator.runner import (ExperimentRunner, cell_seed,
+                                    static_scaling_runner, tenant_runner)
+from repro.simulator.scenarios import make_mixed_scenario
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+TENANT_GOLDEN = GOLDEN_DIR / "tenant_grid.json"
+STATIC_GOLDEN = GOLDEN_DIR / "static_scaling.json"
+SCENARIO_GOLDEN = GOLDEN_DIR / "scenario_grid.json"
+
+
+# --------------------------------------------------------------------- #
+# golden grids
+# --------------------------------------------------------------------- #
+def test_tenant_golden_reproduced_bit_exactly():
+    golden = ExperimentRunner.load(TENANT_GOLDEN)
+    fresh = tenant_runner(n_workers=2).run()
+    assert fresh["meta"] == golden["meta"], \
+        "tenant grid spec drifted from the golden fixture"
+    want = json.dumps(golden["cells"], sort_keys=True)
+    got = json.dumps(fresh["cells"], sort_keys=True)
+    assert got == want, (
+        "tenant grid no longer reproduces the golden metrics; if the "
+        "change is intentional, regenerate with `python -m benchmarks."
+        "bench_scenarios --write-golden-tenants` and review the diff")
+
+
+def test_tenant_golden_covers_classes_and_strategies():
+    golden = ExperimentRunner.load(TENANT_GOLDEN)
+    strategies = {c["strategy"] for c in golden["cells"]}
+    assert len(strategies) >= 2
+    for cell in golden["cells"]:
+        by_class = cell["metrics"]["attainment_by_class"]
+        assert len(by_class) >= 2, cell["strategy"]
+        assert set(by_class) == set(cell["tenants"])
+        assert cell["metrics"]["attainment_min"] == \
+            min(by_class.values())
+
+
+def test_tenant_golden_shows_slo_aware_admission_helps_tight_class():
+    """EcoServe's per-class admission must keep the tight-TTFT tenant
+    (alpaca, 1.0 s budget) healthier than the SLO-blind baselines do —
+    the headline claim of the mixed-tenant scenario family."""
+    grid = ExperimentRunner.grid(ExperimentRunner.load(TENANT_GOLDEN))
+    for scen in ("poisson", "bursty"):
+        eco = grid["ecoserve"][scen][6.0]["attainment_by_class"]["alpaca"]
+        for baseline in ("vllm", "mooncake"):
+            other = grid[baseline][scen][6.0][
+                "attainment_by_class"]["alpaca"]
+            assert eco > other, (scen, baseline, eco, other)
+
+
+def test_static_scaling_golden_reproduced_bit_exactly():
+    golden = ExperimentRunner.load(STATIC_GOLDEN)
+    fresh = static_scaling_runner(n_workers=2).run()
+    assert fresh["meta"] == golden["meta"]
+    want = json.dumps(golden["cells"], sort_keys=True)
+    got = json.dumps(fresh["cells"], sort_keys=True)
+    assert got == want, (
+        "static-scaling grid no longer reproduces the golden metrics; "
+        "regenerate with --write-golden-tenants if intentional")
+
+
+# --------------------------------------------------------------------- #
+# grid axes: seeds and pivot
+# --------------------------------------------------------------------- #
+def test_cell_seed_extra_preserves_legacy_and_separates_axes():
+    legacy = cell_seed(42, "ecoserve", "poisson", 6.0)
+    assert cell_seed(42, "ecoserve", "poisson", 6.0, extra="") == legacy
+    tagged = cell_seed(42, "ecoserve", "poisson", 6.0,
+                       extra="tenants=alpaca+longbench")
+    n2 = cell_seed(42, "ecoserve", "poisson", 6.0, extra="n=2")
+    assert len({legacy, tagged, n2}) == 3
+
+
+def test_instance_count_axis_gives_distinct_specs_and_pivot():
+    r = static_scaling_runner()
+    specs = r.cells()
+    assert [s["n_instances"] for s in specs] == [2, 4]
+    assert len({s["seed"] for s in specs}) == 2
+    grid = ExperimentRunner.grid(ExperimentRunner.load(STATIC_GOLDEN))
+    assert set(grid["ecoserve"]["poisson"]) == {2, 4}
+    assert set(grid["ecoserve"]["poisson"][2]) == {6.0}
+
+
+def test_tenant_cells_carry_tenants_and_meta_roundtrip():
+    r = tenant_runner()
+    for spec in r.cells():
+        assert spec["tenants"] == ["alpaca", "longbench"]
+    golden = ExperimentRunner.load(TENANT_GOLDEN)
+    assert golden["meta"]["tenants"] == ["alpaca", "longbench"]
+    # legacy single-class grids must NOT grow a tenants key
+    legacy_meta = ExperimentRunner.load(SCENARIO_GOLDEN)["meta"]
+    assert "tenants" not in legacy_meta
+
+
+# --------------------------------------------------------------------- #
+# no-RNG-drift acceptance: single-tenant MixedScenario == legacy rows
+# --------------------------------------------------------------------- #
+COST = InstanceCostModel(cfg=get_config("llama-30b"), hw=GPU_L20, tp=4)
+
+
+@pytest.mark.parametrize("strategy", ["ecoserve", "vllm"])
+def test_single_tenant_mixed_scenario_reproduces_legacy_golden(strategy):
+    golden = ExperimentRunner.load(SCENARIO_GOLDEN)
+    cell = next(c for c in golden["cells"]
+                if c["strategy"] == strategy and c["scenario"] == "poisson")
+    slo = SLOClassSet.single(DATASET_SLOS[cell["workload"]],
+                             name=cell["workload"])
+    scen = make_mixed_scenario("poisson", [cell["workload"]],
+                               cell["rate"], seed=cell["seed"])
+    m = run_once(functools.partial(make_system, strategy, COST,
+                                   cell["n_instances"], slo),
+                 scen, cell["rate"], slo,
+                 duration=cell["duration"], warmup=cell["warmup"],
+                 seed=cell["seed"])
+    got = {k: m[k] for k in cell["metrics"]}
+    assert got == cell["metrics"], (
+        "single-tenant MixedScenario drifted from the legacy golden row")

@@ -1,0 +1,124 @@
+"""Round-trip/property tests for the JSONL trace codec with ``slo_class``
+tags: ``write_trace`` -> ``TraceReplay.from_jsonl`` -> ``trace_lines``
+must be lossless (tags included), untagged legacy JSONL must load with
+the default class, and default-class traces must stay byte-identical to
+the legacy three-key format.
+"""
+import json
+import random
+
+import pytest
+
+from repro.core.request import Request
+from repro.core.slo import DEFAULT_SLO_CLASS
+from repro.simulator.scenarios import (TraceReplay, _parse_trace,
+                                       make_mixed_scenario, trace_lines,
+                                       write_trace)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+CLASSES = (DEFAULT_SLO_CLASS, "alpaca", "sharegpt", "longbench",
+           "tenant-x")
+
+
+def _requests(specs):
+    """specs: [(arrival_time, prompt_len, output_len, slo_class)]"""
+    return [Request(rid=i, arrival_time=t, prompt_len=p, output_len=o,
+                    slo_class=c)
+            for i, (t, p, o, c) in enumerate(specs)]
+
+
+def _key(reqs):
+    return [(r.rid, r.arrival_time, r.prompt_len, r.output_len,
+             r.slo_class) for r in reqs]
+
+
+def check_roundtrip_lossless(specs, tmp_path=None) -> None:
+    """Codec round trip; with ``tmp_path`` the trip goes through a real
+    JSONL file (``write_trace``/``from_jsonl``), otherwise in memory
+    (hypothesis examples must not touch function-scoped fixtures)."""
+    reqs = _requests(specs)
+    if tmp_path is not None:
+        path = tmp_path / "trace.jsonl"
+        write_trace(reqs, path)
+        replay = TraceReplay.from_jsonl(path)
+    else:
+        replay = TraceReplay("mem", _parse_trace(trace_lines(reqs)))
+    back = replay.generate()
+    assert _key(back) == _key(reqs)
+    # second trip through the codec is a fixed point
+    assert trace_lines(back) == trace_lines(reqs)
+
+
+# --------------------------------------------------------------------- #
+# hypothesis drive
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+    SPEC = st.tuples(
+        st.floats(min_value=0.0, max_value=1e4, allow_nan=False,
+                  allow_infinity=False),
+        st.integers(1, 4096),
+        st.integers(1, 2048),
+        st.sampled_from(CLASSES))
+
+    @needs_hypothesis
+    @settings(max_examples=50, deadline=None)
+    @given(specs=st.lists(SPEC, min_size=0, max_size=40))
+    def test_roundtrip_lossless_property(specs):
+        check_roundtrip_lossless(specs)
+
+
+# --------------------------------------------------------------------- #
+# seeded fallback + fixed cases
+# --------------------------------------------------------------------- #
+def test_roundtrip_lossless_seeded(tmp_path):
+    rng = random.Random(7)
+    for trial in range(10):
+        specs = [(rng.random() * 1e3, rng.randint(1, 4096),
+                  rng.randint(1, 2048), rng.choice(CLASSES))
+                 for _ in range(rng.randint(0, 40))]
+        check_roundtrip_lossless(specs, tmp_path)
+
+
+def test_mixed_scenario_trace_roundtrip(tmp_path):
+    scen = make_mixed_scenario("bursty", ["alpaca", "longbench"], 8.0,
+                               seed=11)
+    reqs = scen.generate(45.0)
+    assert {r.slo_class for r in reqs} == {"alpaca", "longbench"}
+    check_roundtrip_lossless(
+        [(r.arrival_time, r.prompt_len, r.output_len, r.slo_class)
+         for r in reqs], tmp_path)
+
+
+def test_untagged_legacy_jsonl_loads_with_default_class(tmp_path):
+    path = tmp_path / "legacy.jsonl"
+    path.write_text(
+        '{"arrival_time": 0.25, "prompt_len": 64, "output_len": 8}\n'
+        '\n'   # blank lines tolerated
+        '{"arrival_time": 1.5, "prompt_len": 128, "output_len": 16}\n')
+    reqs = TraceReplay.from_jsonl(path).generate()
+    assert [r.slo_class for r in reqs] == [DEFAULT_SLO_CLASS] * 2
+    assert [r.prompt_len for r in reqs] == [64, 128]
+
+
+def test_default_class_traces_keep_legacy_byte_format():
+    """Untagged requests serialize to exactly the historical three-key
+    record — freezing a single-tenant workload cannot perturb existing
+    trace files or their consumers."""
+    r = Request(rid=0, arrival_time=0.125, prompt_len=7, output_len=3)
+    (line,) = trace_lines([r])
+    assert json.loads(line) == {"arrival_time": 0.125, "prompt_len": 7,
+                                "output_len": 3}
+    assert "slo_class" not in line
+    tagged = Request(rid=1, arrival_time=0.5, prompt_len=9, output_len=2,
+                     slo_class="alpaca")
+    (tline,) = trace_lines([tagged])
+    assert json.loads(tline)["slo_class"] == "alpaca"
