@@ -1,45 +1,54 @@
 """Paper Fig. 11: pipeline-parallel compatibility — throughput vs the
 TPOT SLO as it relaxes from 100 ms to 500 ms.  PaDG + PP (TP2 x PP2)
 overtakes both its TP4 variant and vLLM + PP once the TPOT SLO is loose,
-because PaDG's long phases remove the pipeline bubbles NoDG suffers."""
+because PaDG's long phases remove the pipeline bubbles NoDG suffers.
+
+Folded into the unified ``ExperimentRunner`` (mirroring the PR 3 fold of
+``bench_scaling_static``): the parallelism degree is a grid axis
+(``tp=((4, 1), (2, 2))``, each (tp, pp) pair gets its own CRC-derived
+cell seed) and the relaxing TPOT budget rides on ``slo_override`` —
+one goodput-mode grid per TPOT point instead of a standalone loop."""
 from __future__ import annotations
 
-import dataclasses
+import time
 
-from benchmarks.common import QUICK_DURATION, emit, make_cost, \
-    system_factory, timed
-from repro.core.slo import SLO, DATASET_SLOS
-from repro.simulator.cost_model import GPU_L20
-from repro.simulator.metrics import goodput
-from repro.simulator.workload import WORKLOADS
+from benchmarks.common import QUICK_DURATION, emit
+from repro.simulator.runner import ExperimentRunner
+
+TP_PAIRS = ((4, 1), (2, 2))
 
 
 def run(quick: bool = True):
     model = "codellama2-34b"
-    profile = WORKLOADS["sharegpt"]
     tpots = [0.1, 0.3, 0.5] if quick else [0.1, 0.2, 0.3, 0.4, 0.5]
-    n_inst = 4
-    combos = {
-        "ecoserve_tp4": ("ecoserve", make_cost(model, GPU_L20, tp=4, pp=1)),
-        "ecoserve_tp2pp2": ("ecoserve",
-                            make_cost(model, GPU_L20, tp=2, pp=2)),
-        "vllm_tp2pp2": ("vllm", make_cost(model, GPU_L20, tp=2, pp=2)),
-    }
+    # the full strategy x (tp, pp) product: vllm_tp4pp1 is the no-PP NoDG
+    # anchor the figure's PP variants are read against
+    combos = ("ecoserve_tp4pp1", "ecoserve_tp2pp2",
+              "vllm_tp4pp1", "vllm_tp2pp2")
     print(f"\n== Fig 11: PP compatibility ({model}, ShareGPT) ==")
     print(f"  {'TPOT SLO':>9} " + "".join(f"{k:>18}" for k in combos))
     out = {}
     for tpot in tpots:
-        slo = SLO(ttft=5.0, tpot=tpot)
-        row = {}
-        for label, (sysname, cost) in combos.items():
-            fac = system_factory(sysname, cost, n_inst, slo)
-            g, us = timed(goodput, fac, profile, slo, 0.90,
-                          duration=QUICK_DURATION, hi=96.0)
-            row[label] = g["goodput"]
-            emit(f"fig11_tpot{int(tpot*1000)}ms_{label}", us,
-                 f"goodput={g['goodput']:.2f}")
+        runner = ExperimentRunner(
+            strategies=("ecoserve", "vllm"), scenarios=("poisson",),
+            mode="goodput", target_attainment=0.90,
+            goodput_lo=1.0, goodput_hi=96.0, goodput_tol=0.25,
+            model=model, hw="L20", tp=TP_PAIRS, n_instances=4,
+            workload="sharegpt", slo_override=(5.0, tpot),
+            duration=QUICK_DURATION, warmup=None, base_seed=0)
+        t0 = time.perf_counter()
+        grid = ExperimentRunner.grid(runner.run())
+        # cells run pooled, so the timing is the grid wall clock
+        # amortized per cell (not each combo's isolated runtime)
+        us = (time.perf_counter() - t0) * 1e6 / len(combos)
+        row = {f"{strat}_{tpkey}": grid[strat]["poisson"][tpkey]["goodput"]
+               for strat in ("ecoserve", "vllm")
+               for tpkey in ("tp4pp1", "tp2pp2")}
         out[tpot] = row
-        print(f"  {tpot*1000:7.0f}ms " +
+        for label in combos:
+            emit(f"fig11_tpot{int(tpot * 1000)}ms_{label}", us,
+                 f"goodput={row[label]:.2f}")
+        print(f"  {tpot * 1000:7.0f}ms " +
               "".join(f"{row[k]:18.2f}" for k in combos))
     # the figure's qualitative claim: at relaxed TPOT, EcoServe+PP beats
     # both its own TP variant and vLLM+PP

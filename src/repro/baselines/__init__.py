@@ -1,10 +1,19 @@
-"""Baseline serving systems + the uniform strategy factory.
+"""Declarative strategy layer: ``StrategySpec`` registry + the
+``"base+policy"`` grammar + the uniform ``make_system`` factory.
 
-``make_system`` is the single construction point for every
-``ServingSystem`` variant (EcoServe/PaDG included) so the experiment
-runner, benchmarks, and tests build them identically.
+Every serving strategy (EcoServe/PaDG included) is a ``StrategySpec``:
+a named, paper-provenanced bundle of (system family, queue discipline,
+admission policy, routing policy, constructor kwargs).  ``make_system``
+is the single construction point the experiment runner, benchmarks, and
+tests share; it resolves either a registered spec name (``"vllm"``,
+``"ecoserve++"``) or a grammar composition ``"<base>+<modifier>"``
+(``"vllm+priority"``, ``"mooncake+spf"``) — so new scheduling variants
+are named in grid specs, not forked in code.
 """
-from typing import Callable, Dict, Tuple
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.baselines.nodg_vllm import VLLMSystem          # noqa: F401
 from repro.baselines.nodg_sarathi import SarathiSystem    # noqa: F401
@@ -12,35 +21,201 @@ from repro.baselines.fudg_distserve import DistServeSystem  # noqa: F401
 from repro.baselines.fudg_mooncake import MoonCakeSystem  # noqa: F401
 
 
-def _ecoserve(cost, n, slo, **kw):
+# family names are static so spec validation at registration time needs
+# no imports; _families() resolves classes lazily (EcoServeSystem pulls
+# in the full simulator package, which module-level register() calls
+# must not trigger)
+FAMILY_NAMES = ("ecoserve", "vllm", "sarathi", "distserve", "mooncake")
+
+
+def _families() -> Dict[str, type]:
     from repro.core.padg_system import EcoServeSystem
-    return EcoServeSystem(cost, n, slo, **kw)
+    return {
+        "ecoserve": EcoServeSystem,
+        "vllm": VLLMSystem,
+        "sarathi": SarathiSystem,
+        "distserve": DistServeSystem,
+        "mooncake": MoonCakeSystem,
+    }
 
 
-def _ecoserve_pp(cost, n, slo, **kw):
-    from repro.core.padg_system import EcoServeSystem
-    return EcoServeSystem(cost, n, slo, plus_plus=True, **kw)
+@dataclasses.dataclass(frozen=True)
+class StrategySpec:
+    """One named point in the policy design space.
+
+    ``queue``/``admission``/``routing`` are declarative policy strings
+    (``repro.core.policies``); None means "the family's default", so a
+    spec only pins what it changes.  ``kwargs`` are frozen constructor
+    kwargs for the family class; ``provenance`` records where the
+    composition comes from (paper section, roadmap item).
+    """
+
+    name: str
+    base: str                                  # family: ecoserve|vllm|...
+    queue: Optional[str] = None
+    admission: Optional[str] = None
+    routing: Optional[str] = None
+    kwargs: Tuple[Tuple[str, Any], ...] = ()
+    provenance: str = ""
+
+    def __post_init__(self):
+        if self.base not in FAMILY_NAMES:
+            raise KeyError(f"unknown system family {self.base!r}")
+
+    @property
+    def ctor_kwargs(self) -> Dict[str, Any]:
+        return dict(self.kwargs)
+
+    def describe(self) -> Dict[str, Any]:
+        """Self-documenting composition with None policy slots resolved
+        to the family defaults and policy strings canonicalized through
+        the policy constructors (so ``"backpressure"`` reads back with
+        its effective parameter, exactly as a live system reports it);
+        JSON/pickle-safe, threaded into runner rows and JSONL streams."""
+        from repro.core.policies import (make_admission,
+                                         make_queue_discipline,
+                                         make_routing)
+        cls = _families()[self.base]
+        return {
+            "strategy": self.name,
+            "base": self.base,
+            "queue": make_queue_discipline(
+                self.queue or cls.default_queue).describe(),
+            "admission": make_admission(
+                self.admission or cls.default_admission).describe(),
+            "routing": make_routing(
+                self.routing or cls.default_routing).describe(),
+            "kwargs": self.ctor_kwargs,
+            "provenance": self.provenance,
+        }
+
+    def build(self, cost, n_instances: int, slo=None, **overrides):
+        """Construct the serving system.  ``overrides`` are caller
+        constructor kwargs and win over the spec's frozen ``kwargs``
+        (e.g. ``make_system("ecoserve", ..., queue_timeout_factor=2)``)."""
+        cls = _families()[self.base]
+        kw = {**self.ctor_kwargs, **overrides}
+        if self.queue is not None:
+            kw.setdefault("queue_discipline", self.queue)
+        if self.admission is not None:
+            kw.setdefault("admission", self.admission)
+        if self.routing is not None:
+            kw.setdefault("routing", self.routing)
+        system = cls(cost, n_instances, slo, **kw)
+        system.spec_name = self.name
+        system.provenance = self.provenance
+        return system
 
 
-_REGISTRY: Dict[str, Callable] = {
-    # PaDG (the paper's system) and the beyond-paper admission variant
-    "ecoserve": _ecoserve,
-    "ecoserve++": _ecoserve_pp,
-    # NoDG baselines (paper §4.1 baselines 1-2)
-    "vllm": VLLMSystem,
-    "sarathi": SarathiSystem,
-    # FuDG baselines (paper §4.1 baselines 3-4)
-    "distserve": DistServeSystem,
-    "mooncake": MoonCakeSystem,
+# --------------------------------------------------------------------- #
+# the registry (replaces the old ad-hoc name -> constructor dict)
+# --------------------------------------------------------------------- #
+
+REGISTRY: Dict[str, StrategySpec] = {}
+
+
+def register(spec: StrategySpec) -> StrategySpec:
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+register(StrategySpec(
+    name="ecoserve", base="ecoserve",
+    provenance="EcoServe (arXiv:2504.18154) §3: PaDG temporal "
+               "disaggregation, Alg. 1 rolling activation, Alg. 2 "
+               "admission, mitosis scaling"))
+register(StrategySpec(
+    name="ecoserve++", base="ecoserve", kwargs=(("plus_plus", True),),
+    provenance="beyond-paper EcoServe++: min-slack (conservative) "
+               "admission protecting young decodes"))
+register(StrategySpec(
+    name="vllm", base="vllm",
+    provenance="paper §4.1 baseline 1 (vLLM): NoDG replicas, "
+               "prefill-priority continuous batching"))
+register(StrategySpec(
+    name="sarathi", base="sarathi",
+    provenance="paper §4.1 baseline 2 (Sarathi-Serve): chunked-prefill "
+               "hybrid batching, decode-priority"))
+register(StrategySpec(
+    name="distserve", base="distserve", kwargs=(("prefill_ratio", 0.25),),
+    provenance="paper §4.1 baseline 3 (DistServe): intra-node FuDG, KV "
+               "over the node's PCIe link"))
+register(StrategySpec(
+    name="mooncake", base="mooncake", kwargs=(("prefill_ratio", 0.25),),
+    provenance="paper §4.1 baseline 4 (MoonCake): inter-node FuDG "
+               "through a central KV pool (two NIC traversals)"))
+# SLO-aware NoDG variants (ROADMAP: priority-queue baselines) — first
+# clients of the composable policy API; also reachable via the grammar.
+register(StrategySpec(
+    name="vllm+priority", base="vllm",
+    queue="slo-priority", admission="backpressure",
+    provenance="ROADMAP SLO-aware NoDG: EDF queue over per-class TTFT "
+               "deadlines + backpressure admission on vLLM machinery"))
+register(StrategySpec(
+    name="sarathi+priority", base="sarathi",
+    queue="slo-priority", admission="backpressure",
+    provenance="ROADMAP SLO-aware NoDG: EDF queue over per-class TTFT "
+               "deadlines + backpressure admission on Sarathi machinery"))
+
+STRATEGIES: Tuple[str, ...] = tuple(REGISTRY)
+
+
+# --------------------------------------------------------------------- #
+# the "base+modifier" grammar
+# --------------------------------------------------------------------- #
+
+def _with_queue(queue: str) -> Callable[[StrategySpec], StrategySpec]:
+    """Swap the queue discipline; if the base admits immediately (so its
+    queue is always empty and a discipline could never act), upgrade to
+    backpressure admission so the queue actually forms."""
+    def apply(spec: StrategySpec) -> StrategySpec:
+        cls = _families()[spec.base]
+        effective = spec.admission or cls.default_admission
+        admission = ("backpressure" if effective == "immediate"
+                     else spec.admission)     # None keeps family default
+        return dataclasses.replace(spec, queue=queue, admission=admission)
+    return apply
+
+
+MODIFIERS: Dict[str, Callable[[StrategySpec], StrategySpec]] = {
+    "priority": _with_queue("slo-priority"),
+    "spf": _with_queue("shortest-prompt"),
 }
 
-# default constructor kwargs matching the paper's Fig. 8 deployment
-DEFAULT_KWARGS: Dict[str, Dict] = {
-    "distserve": {"prefill_ratio": 0.25},
-    "mooncake": {"prefill_ratio": 0.25},
-}
 
-STRATEGIES: Tuple[str, ...] = tuple(_REGISTRY)
+def resolve_strategy(name: str) -> StrategySpec:
+    """Registered name, or ``"<base>+<modifier>[+<modifier>...]"`` where
+    ``<base>`` is any registered spec (longest match, so ``ecoserve++``
+    composes too) and modifiers come from ``MODIFIERS``."""
+    if name in REGISTRY:
+        return REGISTRY[name]
+    for base_name in sorted(REGISTRY, key=len, reverse=True):
+        prefix = base_name + "+"
+        if not name.startswith(prefix):
+            continue
+        mods = name[len(prefix):].split("+")
+        if not all(m in MODIFIERS for m in mods):
+            break
+        spec = REGISTRY[base_name]
+        for m in mods:
+            spec = MODIFIERS[m](spec)
+        # compositions must not carry the base's provenance verbatim —
+        # a "+spf" variant is NOT the paper's baseline
+        provenance = (f"{spec.provenance} — composed with "
+                      f"+{'+'.join(mods)} via the strategy grammar")
+        return dataclasses.replace(spec, name=name, provenance=provenance)
+    raise KeyError(
+        f"unknown strategy {name!r}; expected one of {STRATEGIES} or a "
+        f"'<base>+<modifier>' composition with modifiers "
+        f"{tuple(MODIFIERS)}")
+
+
+def describe_strategy(name: str) -> Dict[str, Any]:
+    """Resolve a strategy name and return its self-documenting policy
+    bundle (worker-safe module-level function: the experiment runner
+    attaches this to every result row, and the conformance tests map it
+    across a spawn pool to prove the pickle round-trip)."""
+    return resolve_strategy(name).describe()
 
 
 def make_system(name: str, cost, n_instances: int, slo=None, **kw):
@@ -48,12 +223,9 @@ def make_system(name: str, cost, n_instances: int, slo=None, **kw):
 
     ``slo`` may be a bare ``SLO`` or a multi-tenant ``SLOClassSet``
     (``repro.core.slo``): EcoServe routes each request against its own
-    class budgets; the NoDG/FuDG baselines schedule SLO-blind either way
-    (their policies never read it), but their results are still scored
-    per class by the metrics layer.
+    class budgets; the plain NoDG/FuDG baselines schedule SLO-blind
+    either way, but SLO-aware compositions (``"vllm+priority"``) read it
+    through their queue discipline — and every strategy's results are
+    still scored per class by the metrics layer.
     """
-    if name not in _REGISTRY:
-        raise KeyError(f"unknown strategy {name!r}; "
-                       f"expected one of {STRATEGIES}")
-    merged = {**DEFAULT_KWARGS.get(name, {}), **kw}
-    return _REGISTRY[name](cost, n_instances, slo, **merged)
+    return resolve_strategy(name).build(cost, n_instances, slo, **kw)

@@ -4,7 +4,9 @@ Each node hosts prefill instances and decode instances; the KV cache of
 every request crosses the node's internal interconnect (PCIe on the
 paper's L20 cluster — no NVLink) from prefill to decode instance.  TP
 traffic and KV migration contend for that link; we model the contention
-with a per-node FIFO link.
+with a per-node FIFO link.  As a policy composition: immediate admission
+over prefill-partitioned routing; the KV migration itself is the
+family-specific ``_on_prefill_handoff`` hook.
 """
 from __future__ import annotations
 
@@ -12,6 +14,7 @@ from typing import Dict, List
 
 from repro.core.instance import Instance
 from repro.core.request import Request, RequestState
+from repro.core.system import PolicySystemBase
 from repro.simulator.cost_model import InstanceCostModel
 from repro.simulator.engine import Link, SimulationEngine
 
@@ -20,13 +23,26 @@ class _PrefillInstance(Instance):
     decode_here = False
 
 
-class DistServeSystem:
+class DistServeSystem(PolicySystemBase):
+    base_name = "distserve"
+    default_queue = "fifo"
+    default_admission = "immediate"
+    default_routing = "prefill-least-pending"
+
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
-                 prefill_ratio: float = 0.5, n_nodes: int = None):
+                 prefill_ratio: float = 0.5, n_nodes: int = None,
+                 queue_discipline=None, admission=None, routing=None):
         """``n_instances`` total; a ``prefill_ratio`` fraction become
         prefill instances, the rest decode instances, colocated per node."""
-        self.cost = cost
-        n_prefill = max(1, round(n_instances * prefill_ratio))
+        self.prefill_ratio = prefill_ratio
+        self._n_nodes = n_nodes
+        super().__init__(cost, n_instances, slo,
+                         queue_discipline=queue_discipline,
+                         admission=admission, routing=routing)
+
+    def _build(self, n_instances: int) -> None:
+        cost = self.cost
+        n_prefill = max(1, round(n_instances * self.prefill_ratio))
         n_decode = max(1, n_instances - n_prefill)
         self.prefill_insts: List[Instance] = [
             _PrefillInstance(i, cost, cost.kv_capacity_tokens())
@@ -39,26 +55,25 @@ class DistServeSystem:
         self.instances = self.prefill_insts + self.decode_insts
         # instances per node (both kinds share the node's PCIe link)
         per_node = max(1, cost.hw.devices_per_node // cost.devices)
-        n_nodes = n_nodes or -(-n_instances // per_node)
+        n_nodes = self._n_nodes or -(-n_instances // per_node)
         self.links: Dict[int, Link] = {
             n: Link(f"pcie-node{n}", cost.hw.intra_node_bw)
             for n in range(n_nodes)
         }
+        self._per_node = per_node
         self._node_of: Dict[int, int] = {}
         for idx, inst in enumerate(self.instances):
             self._node_of[inst.iid] = (idx // per_node) % n_nodes
 
-    # ------------------------------------------------------------------ #
-    def submit(self, req: Request, now: float,
-               engine: SimulationEngine) -> None:
-        inst = min(self.prefill_insts, key=lambda i: i.pending_tokens)
-        inst.admit(req, now)
-        engine.activate(inst)
+    def scale_up(self, engine=None) -> Instance:
+        inst = super().scale_up(engine)   # joins decode_insts via routing
+        idx = len(self.instances) - 1
+        self._node_of[inst.iid] = (idx // self._per_node) % len(self.links)
+        return inst
 
-    def on_slot_end(self, inst, kind, reqs: List[Request], now,
-                    engine: SimulationEngine) -> None:
-        if kind != "prefill_handoff":
-            return
+    # ------------------------------------------------------------------ #
+    def _on_prefill_handoff(self, inst, reqs: List[Request], now,
+                            engine: SimulationEngine) -> None:
         link = self.links[self._node_of[inst.iid]]
         for r in reqs:
             target = min(self.decode_insts, key=lambda i: i.kv_tokens_used())

@@ -4,6 +4,8 @@ Prefill and decode instances live on different nodes; KV caches travel
 through a centralized pool: prefill node NIC -> pool -> decode node NIC,
 i.e. ALWAYS two NIC traversals even when instances share a node (the
 paper notes this explicitly).  Ethernet NICs are per-node FIFO links.
+Same policy bundle as DistServe (immediate admission, prefill-partitioned
+routing); only the ``_on_prefill_handoff`` transfer path differs.
 """
 from __future__ import annotations
 
@@ -11,6 +13,7 @@ from typing import Dict, List
 
 from repro.core.instance import Instance
 from repro.core.request import Request, RequestState
+from repro.core.system import PolicySystemBase
 from repro.simulator.cost_model import InstanceCostModel
 from repro.simulator.engine import Link, SimulationEngine
 
@@ -19,11 +22,23 @@ class _PrefillInstance(Instance):
     decode_here = False
 
 
-class MoonCakeSystem:
+class MoonCakeSystem(PolicySystemBase):
+    base_name = "mooncake"
+    default_queue = "fifo"
+    default_admission = "immediate"
+    default_routing = "prefill-least-pending"
+
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
-                 prefill_ratio: float = 0.5):
-        self.cost = cost
-        n_prefill = max(1, round(n_instances * prefill_ratio))
+                 prefill_ratio: float = 0.5,
+                 queue_discipline=None, admission=None, routing=None):
+        self.prefill_ratio = prefill_ratio
+        super().__init__(cost, n_instances, slo,
+                         queue_discipline=queue_discipline,
+                         admission=admission, routing=routing)
+
+    def _build(self, n_instances: int) -> None:
+        cost = self.cost
+        n_prefill = max(1, round(n_instances * self.prefill_ratio))
         n_decode = max(1, n_instances - n_prefill)
         self.prefill_insts = [
             _PrefillInstance(i, cost, cost.kv_capacity_tokens())
@@ -41,16 +56,15 @@ class MoonCakeSystem:
             for inst in self.instances
         }
 
-    def submit(self, req: Request, now: float,
-               engine: SimulationEngine) -> None:
-        inst = min(self.prefill_insts, key=lambda i: i.pending_tokens)
-        inst.admit(req, now)
-        engine.activate(inst)
+    def scale_up(self, engine=None) -> Instance:
+        inst = super().scale_up(engine)   # joins decode_insts via routing
+        self.nic[inst.iid] = Link(f"nic-{inst.iid}",
+                                  self.cost.hw.inter_node_bw)
+        return inst
 
-    def on_slot_end(self, inst, kind, reqs: List[Request], now,
-                    engine: SimulationEngine) -> None:
-        if kind != "prefill_handoff":
-            return
+    # ------------------------------------------------------------------ #
+    def _on_prefill_handoff(self, inst, reqs: List[Request], now,
+                            engine: SimulationEngine) -> None:
         src_nic = self.nic[inst.iid]
         for r in reqs:
             target = min(self.decode_insts, key=lambda i: i.kv_tokens_used())

@@ -4,7 +4,10 @@ decode-priority (paper §4.1 baseline 2).
 Every iteration fuses the running decode batch with up to ``chunk_tokens``
 of prefill work taken from the head of the prompt queue; a prompt's
 prefill spreads over several iterations, re-reading its KV prefix each
-time (the overhead the paper calls out).
+time (the overhead the paper calls out).  The system layer is the same
+immediate/least-KV policy bundle as vLLM — only the instance's intra-slot
+rule differs — so ``"sarathi+priority"`` composes the SLO-aware queue
+onto chunked prefill for free.
 """
 from __future__ import annotations
 
@@ -12,8 +15,8 @@ from typing import List, Tuple
 
 from repro.core.instance import Instance
 from repro.core.request import Request, RequestState
+from repro.core.system import PolicySystemBase
 from repro.simulator.cost_model import InstanceCostModel
-from repro.simulator.engine import SimulationEngine
 
 
 class SarathiInstance(Instance):
@@ -82,21 +85,21 @@ class SarathiInstance(Instance):
         return finished
 
 
-class SarathiSystem:
+class SarathiSystem(PolicySystemBase):
+    base_name = "sarathi"
+    default_queue = "fifo"
+    default_admission = "immediate"
+    default_routing = "least-kv"
+
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
-                 chunk_tokens: int = 512):
-        self.cost = cost
-        self.instances: List[Instance] = [
-            SarathiInstance(i, cost, cost.kv_capacity_tokens(),
-                            chunk_tokens=chunk_tokens)
-            for i in range(n_instances)
-        ]
+                 chunk_tokens: int = 512,
+                 queue_discipline=None, admission=None, routing=None):
+        self.chunk_tokens = chunk_tokens
+        super().__init__(cost, n_instances, slo,
+                         queue_discipline=queue_discipline,
+                         admission=admission, routing=routing)
 
-    def submit(self, req: Request, now: float,
-               engine: SimulationEngine) -> None:
-        inst = min(self.instances, key=lambda i: i.kv_tokens_used())
-        inst.admit(req, now)
-        engine.activate(inst)
-
-    def on_slot_end(self, inst, kind, reqs, now, engine) -> None:
-        pass
+    def _make_instance(self, iid: int) -> Instance:
+        return SarathiInstance(iid, self.cost,
+                               self.cost.kv_capacity_tokens(),
+                               chunk_tokens=self.chunk_tokens)

@@ -1,34 +1,28 @@
 """vLLM-style NoDG baseline: independent replicas, separate batching,
 prefill-priority scheduling (paper §4.1 baseline 1).
 
-Each instance handles the full request lifecycle; requests are routed to
-the least-loaded replica immediately on arrival, so prefills constantly
-interrupt decodes on every replica — the interference PaDG removes.
+Each instance handles the full request lifecycle; as a policy
+composition this is immediate admission over least-KV routing — requests
+enter the least-loaded replica on arrival, so prefills constantly
+interrupt decodes on every replica (the interference PaDG removes) and
+the system-level queue stays empty.  Composing a different bundle turns
+the same machinery SLO-aware: ``"vllm+priority"`` swaps in backpressure
+admission + an EDF queue over per-class TTFT deadlines.
 """
 from __future__ import annotations
 
-from typing import List
-
-from repro.core.instance import Instance
-from repro.core.request import Request
+from repro.core.system import PolicySystemBase
 from repro.simulator.cost_model import InstanceCostModel
-from repro.simulator.engine import SimulationEngine
 
 
-class VLLMSystem:
-    def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None):
-        self.cost = cost
-        self.instances: List[Instance] = [
-            Instance(i, cost, kv_capacity_tokens=cost.kv_capacity_tokens())
-            for i in range(n_instances)
-        ]
+class VLLMSystem(PolicySystemBase):
+    base_name = "vllm"
+    default_queue = "fifo"
+    default_admission = "immediate"
+    default_routing = "least-kv"
 
-    def submit(self, req: Request, now: float,
-               engine: SimulationEngine) -> None:
-        # least outstanding KV tokens = least loaded
-        inst = min(self.instances, key=lambda i: i.kv_tokens_used())
-        inst.admit(req, now)
-        engine.activate(inst)
-
-    def on_slot_end(self, inst, kind, reqs, now, engine) -> None:
-        pass
+    def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
+                 queue_discipline=None, admission=None, routing=None):
+        super().__init__(cost, n_instances, slo,
+                         queue_discipline=queue_discipline,
+                         admission=admission, routing=routing)

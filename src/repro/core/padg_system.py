@@ -2,30 +2,35 @@
 
 Combines: temporal disaggregation (Instance), rolling activation +
 Algorithm 1 (MacroInstance), Algorithm 2 (constraints), mitosis scaling
-(OverallScheduler).  Unadmitted requests wait in a macro-level queue and
-are retried at every slot boundary — the paper's "continuous stream"
-admission.
+(OverallScheduler).  Expressed as a ``PolicySystemBase`` composition:
+macro-least-utilized routing (Algorithm 1 over macro instances),
+timeout-forced admission (the paper's "continuous stream" rule:
+slack-guarded, force-admitted once a request has overstayed its own
+class's TTFT budget), and a FIFO drain of the macro-level queue at every
+slot boundary.  Swap the queue discipline to get e.g.
+``"ecoserve+priority"`` without touching this file.
 """
 from __future__ import annotations
 
-from collections import deque
-from typing import Deque, List, Optional
-
 from repro.core.instance import Instance
-from repro.core.macro import MacroInstance
 from repro.core.mitosis import OverallScheduler, register_instance
-from repro.core.request import Request
-from repro.core.slo import SLO, as_slo_class_set
+from repro.core.policies import TimeoutForcedAdmission
+from repro.core.system import PolicySystemBase
 from repro.simulator.cost_model import InstanceCostModel
-from repro.simulator.engine import SimulationEngine
 
 
-class EcoServeSystem:
+class EcoServeSystem(PolicySystemBase):
+    base_name = "ecoserve"
+    default_queue = "fifo"
+    default_admission = "timeout-forced:4"
+    default_routing = "macro-least-utilized"
+
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo,
                  n_lower: int = 4, n_upper: int = 16,
                  queue_timeout_factor: float = 4.0,
                  plus_plus: bool = False,
-                 chunked_fallback: int = 0):
+                 chunked_fallback: int = 0,
+                 queue_discipline=None, admission=None, routing=None):
         """``slo`` is a bare ``SLO`` or a multi-tenant ``SLOClassSet``;
         with a class set, admission/routing/slack all run against each
         request's own class budgets (single-class sets are bit-identical
@@ -38,22 +43,25 @@ class EcoServeSystem:
         ``chunked_fallback`` > 0 enables EcoServe-CP (beyond-paper):
         when slack is too thin for a full prefill slot, that many prefill
         tokens ride along with each decode iteration."""
-        self.cost = cost
-        self.slo_set = as_slo_class_set(slo)
-        self.slo: SLO = self.slo_set.default_slo
         self.plus_plus = plus_plus
         self.chunked_fallback = chunked_fallback
+        self.n_lower = n_lower
+        self.n_upper = n_upper
+        self.queue_timeout_factor = queue_timeout_factor
+        if admission is None:
+            admission = TimeoutForcedAdmission(queue_timeout_factor)
+        super().__init__(cost, n_instances, slo,
+                         queue_discipline=queue_discipline,
+                         admission=admission, routing=routing)
+
+    def _build(self, n_instances: int) -> None:
         self.sched = OverallScheduler(
-            self.slo_set, cost.predict_prefill, n_lower=n_lower,
-            n_upper=n_upper, conservative=plus_plus)
-        self.instances: List[Instance] = []
+            self.slo_set, self.cost.predict_prefill, n_lower=self.n_lower,
+            n_upper=self.n_upper, conservative=self.plus_plus)
         for i in range(n_instances):
             inst = self._make_instance(i)
             self.instances.append(inst)
             self.sched.add_instance(inst)
-        self.queue: Deque[Request] = deque()
-        self.queue_timeout_factor = queue_timeout_factor
-        self._next_iid = n_instances
 
     def _make_instance(self, iid: int) -> Instance:
         inst = Instance(
@@ -63,66 +71,4 @@ class EcoServeSystem:
             chunked_fallback=self.chunked_fallback,
             slo_classes=self.slo_set)
         register_instance(inst)
-        return inst
-
-    # ---------------- engine hooks ------------------------------------- #
-    def submit(self, req: Request, now: float,
-               engine: SimulationEngine) -> None:
-        inst = self._try_admit(req, now)
-        if inst is not None:
-            engine.activate(inst)
-        else:
-            self.queue.append(req)
-
-    def on_slot_end(self, inst, kind, reqs, now, engine) -> None:
-        # retry queued admissions: instance states just changed
-        self._drain_queue(now, engine)
-
-    # ---------------- admission ----------------------------------------- #
-    def _try_admit(self, req: Request, now: float) -> Optional[Instance]:
-        for m in sorted(self.sched.macros,
-                        key=lambda m: m.utilization(now)):
-            inst = m.route(req, now)
-            if inst is not None:
-                return inst
-        # SLO unreachable for this request: admit anyway once it has
-        # waited too long against ITS OWN class's TTFT budget (completes,
-        # counted as violation)
-        ttft = self.slo_set.for_request(req).ttft
-        if now - req.arrival_time > self.queue_timeout_factor * ttft:
-            return self.sched.macros[0].route_forced(req, now)
-        return None
-
-    def _drain_queue(self, now: float, engine: SimulationEngine,
-                     max_tries: int = 64) -> None:
-        """Retry queued admissions FIFO; bounded per call so an overload
-        backlog cannot make every slot boundary O(queue)."""
-        tries = 0
-        fails = 0
-        still: Deque[Request] = deque()
-        while self.queue and tries < max_tries and fails < 4:
-            req = self.queue.popleft()
-            tries += 1
-            inst = self._try_admit(req, now)
-            if inst is not None:
-                engine.activate(inst)
-                fails = 0
-            else:
-                still.append(req)
-                fails += 1
-        still.extend(self.queue)
-        self.queue = still
-
-    # ---------------- mitosis hooks (dynamic scaling bench) ------------- #
-    def scale_up(self, engine: SimulationEngine) -> Instance:
-        inst = self._make_instance(self._next_iid)
-        self._next_iid += 1
-        self.instances.append(inst)
-        self.sched.add_instance(inst)
-        return inst
-
-    def scale_down(self) -> Optional[Instance]:
-        inst = self.sched.remove_instance()
-        if inst is not None and inst in self.instances:
-            self.instances.remove(inst)
         return inst

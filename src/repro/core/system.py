@@ -1,0 +1,194 @@
+"""The formal ``ServingSystem`` protocol and the shared policy core.
+
+``ServingSystem`` is the contract the simulation engine (and the
+real-exec server) drives: ``submit`` new requests, get ``on_slot_end``
+callbacks at every slot boundary, ``scale_up``/``scale_down`` under the
+mitosis benchmarks, and ``describe()`` the strategy composition so every
+result row is self-documenting.
+
+``PolicySystemBase`` is the one implementation of the queue/retry/drain
+machinery that used to be copy-pasted (or absent) across
+``padg_system.py`` and the baselines.  Behaviour is composed from three
+policies (``repro.core.policies``):
+
+    submit(req)        -> admission.try_admit -> routing.place/select
+                          (queued on refusal)
+    on_slot_end(...)   -> drain the queue in queue_discipline order
+                          (instance states just changed)
+    scale_up/down      -> routing.add_instance / routing.remove_instance
+
+The drain loop is bounded per call (``max_tries``, 4 consecutive
+failures) so an overload backlog cannot make every slot boundary
+O(queue); with the FIFO discipline it is bit-identical to the
+pre-policy-API deque loop, which is what keeps the golden grids
+reproducing exactly through the redesigned construction path.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import (Any, Deque, Dict, List, Optional, Protocol,
+                    runtime_checkable)
+
+from repro.core.instance import Instance
+from repro.core.policies import (AdmissionPolicy, QueueDiscipline,
+                                 RoutingPolicy, make_admission,
+                                 make_queue_discipline, make_routing)
+from repro.core.request import Request
+from repro.core.slo import SLO, SLOClassSet, as_slo_class_set
+
+
+@runtime_checkable
+class ServingSystem(Protocol):
+    """What the discrete-event engine (and the mitosis benchmarks)
+    require of any serving strategy."""
+
+    instances: List[Instance]
+
+    def submit(self, req: Request, now: float, engine) -> None:
+        """A request arrived; admit it somewhere or queue it."""
+        ...
+
+    def on_slot_end(self, inst: Instance, kind: str, reqs: List[Request],
+                    now: float, engine) -> None:
+        """An instance finished a slot (prefill batch / decode iteration
+        / FuDG hand-off); instance states just changed."""
+        ...
+
+    def scale_up(self, engine=None) -> Optional[Instance]:
+        """Add one instance to the serving pool (mitosis expansion)."""
+        ...
+
+    def scale_down(self) -> Optional[Instance]:
+        """Retire one instance (mitosis contraction); it drains its
+        in-flight work but receives no new requests."""
+        ...
+
+    def describe(self) -> Dict[str, Any]:
+        """Self-documenting policy composition (JSON/pickle-safe)."""
+        ...
+
+
+class PolicySystemBase:
+    """Shared queue/retry/drain core; strategies differ only in their
+    policy bundle, instance construction, and (for FuDG) the KV
+    hand-off hook."""
+
+    # family identity + declarative policy defaults (overridden per class;
+    # ``StrategySpec.describe`` reads these to resolve None policy slots)
+    base_name = "base"
+    default_queue = "fifo"
+    default_admission = "immediate"
+    default_routing = "least-kv"
+
+    def __init__(self, cost, n_instances: int, slo=None, *,
+                 queue_discipline=None, admission=None, routing=None):
+        """``slo`` is a bare ``SLO``, an ``SLOClassSet``, or None for the
+        SLO-blind baselines; policies may be declarative strings
+        (``"timeout-forced:4"``) or policy instances."""
+        self.cost = cost
+        self.slo_set: Optional[SLOClassSet] = (
+            as_slo_class_set(slo) if slo is not None else None)
+        self.slo: Optional[SLO] = (
+            self.slo_set.default_slo if self.slo_set is not None else None)
+        self.queue_discipline: QueueDiscipline = make_queue_discipline(
+            queue_discipline if queue_discipline is not None
+            else self.default_queue)
+        self.admission: AdmissionPolicy = make_admission(
+            admission if admission is not None else self.default_admission)
+        self.routing: RoutingPolicy = make_routing(
+            routing if routing is not None else self.default_routing)
+        self.queue: Deque[Request] = deque()
+        self.instances: List[Instance] = []
+        # set by StrategySpec.build; direct construction keeps family name
+        self.spec_name: Optional[str] = None
+        self.provenance: str = ""
+        self._build(n_instances)
+        self._next_iid = 1 + max((i.iid for i in self.instances),
+                                 default=-1)
+
+    # ---------------- construction hooks -------------------------------- #
+    def _build(self, n_instances: int) -> None:
+        for i in range(n_instances):
+            self.instances.append(self._make_instance(i))
+
+    def _make_instance(self, iid: int) -> Instance:
+        return Instance(iid, self.cost,
+                        kv_capacity_tokens=self.cost.kv_capacity_tokens())
+
+    # ---------------- engine hooks --------------------------------------- #
+    def submit(self, req: Request, now: float, engine) -> None:
+        inst = self.admission.try_admit(self, req, now)
+        if inst is not None:
+            engine.activate(inst)
+        else:
+            self.queue.append(req)
+
+    def on_slot_end(self, inst: Instance, kind: str, reqs: List[Request],
+                    now: float, engine) -> None:
+        if kind == "prefill_handoff":
+            self._on_prefill_handoff(inst, reqs, now, engine)
+            return
+        # retry queued admissions: instance states just changed
+        self._drain_queue(now, engine)
+
+    def _on_prefill_handoff(self, inst: Instance, reqs: List[Request],
+                            now: float, engine) -> None:
+        raise NotImplementedError(
+            f"{type(self).__name__} routed a request to a prefill-only "
+            "instance but defines no KV hand-off hook")
+
+    # ---------------- queue ---------------------------------------------- #
+    def _drain_queue(self, now: float, engine, max_tries: int = 64) -> None:
+        """Retry queued admissions in discipline order; bounded per call
+        so an overload backlog cannot make every slot boundary O(queue).
+        Requests that fail (or are never reached) keep their arrival
+        order in the underlying deque."""
+        if not self.queue:
+            return
+        order = self.queue_discipline.order(self.queue, now, self.slo_set,
+                                            limit=max_tries)
+        admitted = set()
+        tries = 0
+        fails = 0
+        for req in order:
+            if tries >= max_tries or fails >= 4:
+                break
+            tries += 1
+            inst = self.admission.try_admit(self, req, now)
+            if inst is not None:
+                engine.activate(inst)
+                admitted.add(id(req))
+                fails = 0
+            else:
+                fails += 1
+        if admitted:
+            self.queue = deque(
+                r for r in self.queue if id(r) not in admitted)
+
+    # ---------------- mitosis hooks (dynamic scaling bench) -------------- #
+    def scale_up(self, engine=None) -> Instance:
+        inst = self._make_instance(self._next_iid)
+        self._next_iid += 1
+        self.instances.append(inst)
+        self.routing.add_instance(self, inst)
+        return inst
+
+    def scale_down(self) -> Optional[Instance]:
+        inst = self.routing.remove_instance(self)
+        if inst is not None and inst in self.instances:
+            self.instances.remove(inst)
+        return inst
+
+    # ---------------- self-description ----------------------------------- #
+    def describe(self) -> Dict[str, Any]:
+        """The live policy composition (strings, ints — pickle/JSON safe;
+        the worker boundary round-trips this through pickle)."""
+        return {
+            "strategy": self.spec_name or self.base_name,
+            "base": self.base_name,
+            "queue": self.queue_discipline.describe(),
+            "admission": self.admission.describe(),
+            "routing": self.routing.describe(),
+            "n_instances": len(self.instances),
+            "provenance": self.provenance,
+        }

@@ -21,10 +21,12 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
-from typing import Callable, Dict, List, Optional, Protocol, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.instance import Instance
 from repro.core.request import Request
+from repro.core.system import ServingSystem  # noqa: F401  (re-export: the
+# formal protocol moved to repro.core.system; engine callers keep working)
 
 
 class Link:
@@ -43,14 +45,6 @@ class Link:
         self.busy_until = done
         self.bytes_moved += nbytes
         return done
-
-
-class ServingSystem(Protocol):
-    instances: List[Instance]
-
-    def submit(self, req: Request, now: float, engine: "SimulationEngine"): ...
-    def on_slot_end(self, inst: Instance, kind: str, reqs: List[Request],
-                    now: float, engine: "SimulationEngine") -> None: ...
 
 
 @dataclasses.dataclass(order=True)

@@ -21,18 +21,31 @@ Two per-cell modes:
   simulator hot path is fast enough to run the ~10 probe simulations a
   search needs inside a single worker.
 
-Two more grid axes (both seed-disambiguated through ``cell_seed``'s
+Strategies are ``StrategySpec`` names resolved by ``repro.baselines``:
+registered specs (``"vllm"``, ``"ecoserve++"``) or ``"base+policy"``
+grammar compositions (``"vllm+priority"``, ``"mooncake+spf"``) — grid
+cells name policy bundles directly, and every result row carries the
+resolved ``describe()`` bundle under ``"system"`` (also in the streamed
+JSONL), so rows are self-documenting.
+
+Three more grid axes (all seed-disambiguated through ``cell_seed``'s
 ``extra`` component, so legacy single-axis grids keep their historical
 seeds):
 
 * ``tenants=("alpaca", "longbench")`` — every cell becomes a
-  multi-tenant ``MixedScenario`` with one equal-share stream per listed
-  Table 4 workload, tagged with that workload name as its ``slo_class``
-  and scored against its own SLO; rows carry ``attainment_by_class`` and
+  multi-tenant ``MixedScenario`` with one stream per listed Table 4
+  workload, tagged with that workload name as its ``slo_class`` and
+  scored against its own SLO; rows carry ``attainment_by_class`` and
   ``attainment_min``, and goodput mode bisects on the min-over-classes
-  attainment (one starved tenant caps the frontier).
+  attainment (one starved tenant caps the frontier).  Entries may pin a
+  rate share and a per-tenant arrival shape:
+  ``tenants=(("alpaca", 0.7, "bursty"), ("longbench", 0.3, "diurnal"))``
+  (plain-name tuples keep their PR 3 seeds).
 * ``n_instances=(1, 2, 4)`` — the instance count as a grid axis (Fig. 9
   static scaling, folded from the old standalone bench loop).
+* ``tp=((4, 1), (2, 2))`` — the parallelism degree as a grid axis
+  (ints or (tp, pp) pairs); with ``slo_override=(ttft, tpot)`` this
+  folds the Fig. 11 PP-compatibility bench into the runner.
 
 Cells run through ``imap_unordered`` with per-cell error capture: a
 crashing cell yields a row carrying its spec and the error string instead
@@ -50,7 +63,7 @@ import zlib
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.configs import get_config
-from repro.core.slo import DATASET_SLOS, SLOClassSet
+from repro.core.slo import DATASET_SLOS, SLO, SLOClassSet
 from repro.simulator.cost_model import (GPU_A800, GPU_L20, TPU_V5E_SIM,
                                         InstanceCostModel)
 from repro.simulator.metrics import goodput, run_once
@@ -87,21 +100,34 @@ def cell_seed(base_seed: int, strategy: str, scenario: str,
     return (zlib.crc32(key) ^ (base_seed * 2654435761)) & 0x7FFFFFFF
 
 
+def tenant_names(tenants: Sequence) -> List[str]:
+    """Workload names out of a tenant axis spec (entries are names or
+    ``(name, share[, shape])`` tuples/lists)."""
+    return [e if isinstance(e, str) else e[0] for e in tenants]
+
+
 def _run_cell(spec: Dict) -> Dict:
     """Worker entry point: one (strategy, scenario, rate) simulation, or
     one per-(strategy, scenario) goodput search when spec["mode"] is
-    "goodput"."""
+    "goodput".  Every row carries the strategy's ``describe()`` bundle
+    under ``"system"`` so results are self-documenting."""
     # imported here (not module level): repro.baselines pulls in the
     # system classes, which import repro.simulator — a cycle at load time
-    from repro.baselines import make_system
+    from repro.baselines import describe_strategy, make_system
     cost = InstanceCostModel(cfg=get_config(spec["model"]),
                              hw=HARDWARE[spec["hw"]],
                              tp=spec["tp"], pp=spec["pp"])
+    describe = describe_strategy(spec["strategy"])
     tenants = spec.get("tenants")
     if tenants:
         # one SLO class per tenant workload (Table 4 budgets); requests
         # are tagged by MixedScenario and scored per class
-        slo = SLOClassSet.make({w: DATASET_SLOS[w] for w in tenants})
+        slo = SLOClassSet.make(
+            {w: DATASET_SLOS[w] for w in tenant_names(tenants)})
+    elif spec.get("slo_override"):
+        # pinned scalar budgets (the PP-compatibility sweep relaxes TPOT
+        # away from any Table 4 workload)
+        slo = SLO(ttft=spec["slo_override"][0], tpot=spec["slo_override"][1])
     else:
         slo = DATASET_SLOS[spec["workload"]]
 
@@ -123,7 +149,7 @@ def _run_cell(spec: Dict) -> Dict:
                     tol=spec["goodput_tol"], duration=spec["duration"],
                     warmup=spec["warmup"], seed=spec["seed"])
         summary = {k: g[k] for k in GOODPUT_SUMMARY_KEYS if k in g}
-        return {**spec, "metrics": summary}
+        return {**spec, "metrics": summary, "system": describe}
 
     if tenants:
         scenario = make_mixed_scenario(spec["scenario"], tenants,
@@ -135,7 +161,7 @@ def _run_cell(spec: Dict) -> Dict:
                        duration=spec["duration"], warmup=spec["warmup"],
                        seed=spec["seed"])
     summary = {k: metrics[k] for k in SUMMARY_KEYS if k in metrics}
-    return {**spec, "metrics": summary}
+    return {**spec, "metrics": summary, "system": describe}
 
 
 def _run_cell_safe(item: Tuple[int, Dict]) -> Tuple[int, Dict]:
@@ -160,17 +186,28 @@ class ExperimentRunner:
     rates: Sequence[float] = (8.0,)
     model: str = "llama-30b"
     hw: str = "L20"
-    tp: int = 4
+    # a bare int (legacy) or a sequence: a sequence makes the parallelism
+    # degree a grid axis (Fig. 11 PP compatibility folded into the
+    # runner).  Sequence entries are ints (``pp`` applies) or (tp, pp)
+    # pairs for joint sweeps like ``tp=((4, 1), (2, 2))``.
+    tp: Union[int, Sequence] = 4
     pp: int = 1
     # a bare int (legacy) or a sequence: a sequence makes the instance
     # count a grid axis (Fig. 9 static scaling folded into the runner)
     n_instances: Union[int, Sequence[int]] = 8
     workload: str = "sharegpt"
     # multi-tenant mode: tenant workload names (Table 4); each cell runs a
-    # MixedScenario with one equal-share tenant stream per name, tagged
-    # with that name as its slo_class, scored against DATASET_SLOS per
-    # class.  None = legacy single-class cells (``workload`` applies).
-    tenants: Optional[Sequence[str]] = None
+    # MixedScenario with one tenant stream per entry, tagged with that
+    # workload name as its slo_class, scored against DATASET_SLOS per
+    # class.  Entries are names (equal share, the cell's scenario shape)
+    # or (name, share[, shape]) tuples pinning that tenant's fraction of
+    # the rate and optionally its own arrival shape, e.g.
+    # ``tenants=(("alpaca", 0.7, "bursty"), ("longbench", 0.3, "diurnal"))``.
+    # None = legacy single-class cells (``workload`` applies).
+    tenants: Optional[Sequence] = None
+    # pinned (ttft, tpot) overriding the workload's Table 4 budgets
+    # (single-class only; the PP sweep relaxes TPOT past any workload's)
+    slo_override: Optional[Sequence[float]] = None
     duration: float = 60.0
     warmup: Optional[float] = None
     base_seed: int = 0
@@ -193,6 +230,9 @@ class ExperimentRunner:
                              "expected 'fixed' or 'goodput'")
         if self.tenants is not None and len(self.tenants) == 0:
             raise ValueError("tenants must be None or a non-empty sequence")
+        if self.tenants is not None and self.slo_override is not None:
+            raise ValueError("slo_override is single-class only; tenant "
+                             "cells score against per-class Table 4 SLOs")
 
     # ---- grid axes ---------------------------------------------------- #
     def _instance_counts(self) -> Tuple[int, ...]:
@@ -200,23 +240,63 @@ class ExperimentRunner:
             return (self.n_instances,)
         return tuple(self.n_instances)
 
-    def _seed_extra(self, n: int) -> str:
+    def _tp_pairs(self) -> Tuple[Tuple[int, int], ...]:
+        if isinstance(self.tp, int):
+            return ((self.tp, self.pp),)
+        return tuple((t, self.pp) if isinstance(t, int)
+                     else (int(t[0]), int(t[1])) for t in self.tp)
+
+    def _norm_tenants(self) -> Optional[List]:
+        """JSON-able tenant entries for cell specs: names stay strings
+        (legacy golden cells keep their exact spec), rich entries become
+        [name, share, shape] lists."""
+        if self.tenants is None:
+            return None
+        out: List = []
+        for e in self.tenants:
+            if isinstance(e, str):
+                out.append(e)
+            else:
+                seq = list(e) + [None] * (3 - len(e))
+                out.append([seq[0],
+                            None if seq[1] is None else float(seq[1]),
+                            seq[2]])
+        return out
+
+    def _seed_extra(self, n: int, tp_pair: Tuple[int, int]) -> str:
         """Extra seed-key components for the new grid axes.  Empty for a
-        legacy single-class, single-count grid — those cells keep their
-        historical seeds and golden fixtures."""
+        legacy single-class, single-count, single-tp grid — those cells
+        keep their historical seeds and golden fixtures.  Plain-name
+        tenant tuples keep the PR 3 encoding (and therefore seeds);
+        share/shape-qualified entries encode all three fields."""
         parts = []
         if self.tenants:
-            parts.append("tenants=" + "+".join(self.tenants))
+            enc = []
+            for e in self.tenants:
+                if isinstance(e, str):
+                    enc.append(e)
+                else:
+                    seq = tuple(e)
+                    share = "" if len(seq) < 2 or seq[1] is None \
+                        else f"{float(seq[1]):g}"
+                    shape = seq[2] if len(seq) > 2 and seq[2] else ""
+                    enc.append(f"{seq[0]}:{share}:{shape}")
+            parts.append("tenants=" + "+".join(enc))
         if len(self._instance_counts()) > 1:
             parts.append(f"n={n}")
+        if len(self._tp_pairs()) > 1:
+            parts.append(f"tp={tp_pair[0]}x{tp_pair[1]}")
         return "|".join(parts)
 
     def cells(self) -> List[Dict]:
-        common = dict(model=self.model, hw=self.hw, tp=self.tp, pp=self.pp,
+        common = dict(model=self.model, hw=self.hw,
                       workload=self.workload,
                       duration=self.duration, warmup=self.warmup)
-        if self.tenants:
-            common["tenants"] = list(self.tenants)
+        tenants = self._norm_tenants()
+        if tenants:
+            common["tenants"] = tenants
+        if self.slo_override is not None:
+            common["slo_override"] = [float(x) for x in self.slo_override]
         out = []
         if self.mode == "goodput":
             common.update(mode="goodput",
@@ -227,25 +307,33 @@ class ExperimentRunner:
             for strat in self.strategies:
                 for scen in self.scenarios:
                     for n in self._instance_counts():
-                        # rate 0.0 = the search's seed sentinel: one seed
-                        # per (strategy, scenario[, axes]), shared by
-                        # every probe
-                        out.append({**common, "strategy": strat,
-                                    "scenario": scen, "n_instances": n,
-                                    "seed": cell_seed(
-                                        self.base_seed, strat, scen, 0.0,
-                                        extra=self._seed_extra(n))})
+                        for t, p in self._tp_pairs():
+                            # rate 0.0 = the search's seed sentinel: one
+                            # seed per (strategy, scenario[, axes]),
+                            # shared by every probe
+                            out.append({**common, "strategy": strat,
+                                        "scenario": scen, "n_instances": n,
+                                        "tp": t, "pp": p,
+                                        "seed": cell_seed(
+                                            self.base_seed, strat, scen,
+                                            0.0,
+                                            extra=self._seed_extra(
+                                                n, (t, p)))})
             return out
         for strat in self.strategies:
             for scen in self.scenarios:
                 for rate in self.rates:
                     for n in self._instance_counts():
-                        out.append({**common, "strategy": strat,
-                                    "scenario": scen, "rate": rate,
-                                    "n_instances": n,
-                                    "seed": cell_seed(
-                                        self.base_seed, strat, scen, rate,
-                                        extra=self._seed_extra(n))})
+                        for t, p in self._tp_pairs():
+                            out.append({**common, "strategy": strat,
+                                        "scenario": scen, "rate": rate,
+                                        "n_instances": n,
+                                        "tp": t, "pp": p,
+                                        "seed": cell_seed(
+                                            self.base_seed, strat, scen,
+                                            rate,
+                                            extra=self._seed_extra(
+                                                n, (t, p)))})
         return out
 
     def run(self) -> Dict:
@@ -283,9 +371,15 @@ class ExperimentRunner:
         if self.tenants is None:     # legacy single-class grids keep the
             meta.pop("tenants")      # pre-multi-tenant meta shape
         else:
-            meta["tenants"] = list(self.tenants)
+            meta["tenants"] = self._norm_tenants()
+        if self.slo_override is None:   # ditto for the pinned-SLO knob
+            meta.pop("slo_override")
+        else:
+            meta["slo_override"] = [float(x) for x in self.slo_override]
         if not isinstance(self.n_instances, int):
             meta["n_instances"] = list(self.n_instances)
+        if not isinstance(self.tp, int):
+            meta["tp"] = [list(p) for p in self._tp_pairs()]
         meta["strategies"] = list(self.strategies)
         meta["scenarios"] = list(self.scenarios)
         meta["rates"] = list(self.rates)
@@ -309,28 +403,27 @@ class ExperimentRunner:
     @staticmethod
     def grid(results: Dict) -> Dict[str, Dict[str, Dict[float, Dict]]]:
         """Pivot the flat cell list to [strategy][scenario][rate]
-        (fixed mode) or [strategy][scenario] (goodput mode).  When the
-        grid sweeps ``n_instances``, one more level [n_instances] is
-        inserted after [scenario] so swept counts can't overwrite each
-        other."""
+        (fixed mode) or [strategy][scenario] (goodput mode).  Swept axes
+        insert their own levels after [scenario] so cells can't overwrite
+        each other: a ``tp`` sweep keys ``"tp{T}pp{P}"`` and an
+        ``n_instances`` sweep keys the count, in that order."""
         cells = results["cells"]
         multi_n = len({c.get("n_instances") for c in cells}) > 1
+        multi_tp = len({(c.get("tp"), c.get("pp")) for c in cells}) > 1
         out: Dict[str, Dict[str, Dict]] = {}
         for cell in cells:
-            by_scen = out.setdefault(cell["strategy"], {})
             leaf = cell.get("metrics", cell)
+            keys: List = [cell["scenario"]]
+            if multi_tp:
+                keys.append(f"tp{cell['tp']}pp{cell['pp']}")
             if multi_n:
-                by_n = by_scen.setdefault(cell["scenario"], {})
-                if cell.get("mode") == "goodput":
-                    by_n[cell["n_instances"]] = leaf
-                else:
-                    by_n.setdefault(
-                        cell["n_instances"], {})[cell["rate"]] = leaf
-            elif cell.get("mode") == "goodput":
-                by_scen[cell["scenario"]] = leaf
-            else:
-                by_scen.setdefault(cell["scenario"], {})[cell["rate"]] = \
-                    leaf
+                keys.append(cell["n_instances"])
+            if cell.get("mode") != "goodput":
+                keys.append(cell["rate"])
+            node = out.setdefault(cell["strategy"], {})
+            for k in keys[:-1]:
+                node = node.setdefault(k, {})
+            node[keys[-1]] = leaf
         return out
 
     @staticmethod
@@ -365,9 +458,11 @@ def goodput_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
     """The canonical goodput-frontier grid (Fig. 8 per traffic shape),
     sized for CI; pinned by tests/golden/goodput_frontier.json.  The
     duration/lo pairing keeps >= ~24 scored requests per probe so a
-    single end-of-window straggler can't sink the completion factor."""
+    single end-of-window straggler can't sink the completion factor.
+    ``vllm+priority`` (a composed ``StrategySpec``) rides along so the
+    policy-grammar construction path is exercised by the frontier too."""
     return ExperimentRunner(
-        strategies=("ecoserve", "vllm", "mooncake"),
+        strategies=("ecoserve", "vllm", "mooncake", "vllm+priority"),
         scenarios=("poisson", "bursty"),
         mode="goodput", target_attainment=0.9,
         goodput_lo=1.0, goodput_hi=24.0, goodput_tol=0.35,
@@ -379,11 +474,15 @@ def goodput_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
 def tenant_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
     """The canonical multi-tenant regression grid: two SLO classes with a
     15x TTFT spread (alpaca 1.0 s vs longbench 15 s, Table 4) mixed into
-    every cell, across three strategies and two traffic shapes; pinned
-    bit-exactly by tests/golden/tenant_grid.json.  Every row carries the
-    per-class attainment grid plus the min-over-classes scalar."""
+    every cell, across two traffic shapes; pinned bit-exactly by
+    tests/golden/tenant_grid.json.  Every row carries the per-class
+    attainment grid plus the min-over-classes scalar.  The SLO-aware
+    NoDG compositions (``vllm+priority``, ``sarathi+priority``) run next
+    to blind vLLM so the grid compares EcoServe against a priority-queue
+    NoDG, not just a blind one (ROADMAP item 1)."""
     return ExperimentRunner(
-        strategies=("ecoserve", "vllm", "mooncake"),
+        strategies=("ecoserve", "vllm", "mooncake",
+                    "vllm+priority", "sarathi+priority"),
         scenarios=("poisson", "bursty"),
         rates=(6.0,),
         tenants=("alpaca", "longbench"),

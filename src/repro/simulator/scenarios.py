@@ -250,28 +250,66 @@ class MixedScenario:
         ]
 
 
-def make_mixed_scenario(kind: str, tenant_workloads: Sequence[str],
+def _norm_tenant_entry(entry) -> Tuple[str, Optional[float], Optional[str]]:
+    """``"alpaca"`` | ``("alpaca", 0.7)`` | ``("alpaca", 0.7, "bursty")``
+    -> (workload name, share or None, arrival shape or None)."""
+    if isinstance(entry, str):
+        return entry, None, None
+    seq = tuple(entry)
+    if not seq or not isinstance(seq[0], str):
+        raise TypeError(f"tenant entry {entry!r}: expected a workload "
+                        "name or (name, share[, shape])")
+    share = float(seq[1]) if len(seq) > 1 and seq[1] is not None else None
+    shape = seq[2] if len(seq) > 2 and seq[2] else None
+    return seq[0], share, shape
+
+
+def make_mixed_scenario(kind: str, tenant_workloads: Sequence,
                         rate: float, seed: int = 0,
                         shares: Optional[Sequence[float]] = None,
                         **kw) -> MixedScenario:
     """Compose one tenant per Table 4 workload name: each tenant's
     ``slo_class`` IS the workload name (so ``DATASET_SLOS`` supplies the
-    per-class budgets), its lengths come from that workload's profile,
-    and its arrival process is ``kind`` at ``rate * share`` (equal shares
-    by default)."""
-    if shares is None:
-        shares = [1.0 / len(tenant_workloads)] * len(tenant_workloads)
-    if len(shares) != len(tenant_workloads):
-        raise ValueError("one share per tenant workload")
+    per-class budgets) and its lengths come from that workload's profile.
+
+    Entries are workload names (equal share of ``rate``, the cell's
+    ``kind`` as arrival shape) or ``(name, share[, shape])`` tuples
+    pinning that tenant's fraction of the total rate and, optionally, its
+    own arrival shape — e.g. bursty alpaca over diurnal longbench:
+    ``(("alpaca", 0.7, "bursty"), ("longbench", 0.3, "diurnal"))``.
+    Entries without an explicit share split the unclaimed remainder
+    equally.  Per-tenant RNG streams are seeded by tenant *identity*
+    either way, so adding a share/shape to one tenant never moves
+    another tenant's draws."""
+    entries = [_norm_tenant_entry(e) for e in tenant_workloads]
+    if shares is not None:
+        if len(shares) != len(entries):
+            raise ValueError("one share per tenant workload")
+        entries = [(n, float(s), sh)
+                   for (n, _, sh), s in zip(entries, shares)]
+    claimed = sum(s for _, s, _ in entries if s is not None)
+    if claimed > 1.0 + 1e-9:
+        raise ValueError(f"tenant shares sum to {claimed} > 1")
+    unspec = sum(1 for _, s, _ in entries if s is None)
+    if not unspec and abs(claimed - 1.0) > 1e-9:
+        # all-explicit shares must cover the rate: a silent shortfall
+        # would label result rows with an offered load nobody simulated
+        raise ValueError(f"explicit tenant shares sum to {claimed}, "
+                         "not 1; leave one share None to absorb the "
+                         "remainder")
+    default_share = (1.0 - claimed) / unspec if unspec else 0.0
     tenants = []
-    for w, share in zip(tenant_workloads, shares):
-        scen = make_scenario(kind, w, rate * share, seed=seed, **kw)
+    for name, share, shape in entries:
+        share = default_share if share is None else share
+        scen = make_scenario(shape or kind, name, rate * share,
+                             seed=seed, **kw)
         if not isinstance(scen, Scenario):
-            raise TypeError(f"kind {kind!r} does not parameterize by rate "
-                            "and cannot form a tenant stream")
-        tenants.append(TenantSpec(slo_class=w, profile=scen.profile,
+            raise TypeError(f"kind {shape or kind!r} does not parameterize "
+                            "by rate and cannot form a tenant stream")
+        tenants.append(TenantSpec(slo_class=name, profile=scen.profile,
                                   arrivals=scen.arrivals))
-    return MixedScenario(name=f"{kind}+{'+'.join(tenant_workloads)}",
+    names = [n for n, _, _ in entries]
+    return MixedScenario(name=f"{kind}+{'+'.join(names)}",
                          tenants=tuple(tenants), seed=seed)
 
 

@@ -1,0 +1,292 @@
+"""Protocol-conformance suite for the composable serving-policy API.
+
+Three layers:
+
+* every registered ``StrategySpec`` built via ``make_system`` satisfies
+  the formal ``ServingSystem`` protocol, and its ``describe()`` bundle
+  round-trips through a worker pickle (a real spawn pool, the same
+  boundary the experiment runner crosses);
+* the ``"base+modifier"`` grammar resolves compositions and rejects
+  junk;
+* the FIFO ``QueueDiscipline`` drain is property-tested (hypothesis +
+  seeded fallbacks) to be bit-identical to the pre-redesign deque loop
+  — the no-drift guarantee behind the golden grids.
+"""
+import functools
+import multiprocessing
+import pickle
+import random
+from collections import deque
+
+import pytest
+
+from repro.baselines import (REGISTRY, STRATEGIES, StrategySpec,
+                             describe_strategy, make_system,
+                             resolve_strategy)
+from repro.configs import get_config
+from repro.core.policies import AdmissionPolicy
+from repro.core.request import Request
+from repro.core.slo import DATASET_SLOS, SLOClassSet
+from repro.core.system import PolicySystemBase, ServingSystem
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.simulator.metrics import run_once
+from repro.simulator.runner import ExperimentRunner
+from repro.simulator.scenarios import make_mixed_scenario
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+COST = InstanceCostModel(cfg=get_config("llama-30b"), hw=GPU_L20, tp=4)
+MIX = SLOClassSet.make(
+    {w: DATASET_SLOS[w] for w in ("alpaca", "longbench")})
+DESCRIBE_KEYS = {"strategy", "base", "queue", "admission", "routing",
+                 "provenance"}
+
+
+# --------------------------------------------------------------------- #
+# protocol conformance over every registered spec
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_registered_spec_builds_a_serving_system(name):
+    system = make_system(name, COST, 2, MIX)
+    assert isinstance(system, ServingSystem)
+    assert isinstance(system, PolicySystemBase)
+    assert system.instances and all(
+        hasattr(i, "next_slot") for i in system.instances)
+    for hook in ("submit", "on_slot_end", "scale_up", "scale_down",
+                 "describe"):
+        assert callable(getattr(system, hook)), (name, hook)
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+def test_describe_is_self_documenting_and_pickle_stable(name):
+    system = make_system(name, COST, 2, MIX)
+    d = system.describe()
+    assert DESCRIBE_KEYS <= set(d)
+    assert d["strategy"] == name
+    assert pickle.loads(pickle.dumps(d)) == d
+    # the spec-level describe (what runner rows carry) agrees on the
+    # policy bundle the live system actually composed
+    spec_d = describe_strategy(name)
+    for key in ("strategy", "base", "queue", "admission", "routing",
+                "provenance"):
+        assert spec_d[key] == d[key], (name, key)
+
+
+def test_describe_round_trips_through_a_worker_pickle():
+    """The same spawn-pool boundary ``ExperimentRunner`` uses: describe
+    bundles computed in worker processes must arrive identical to the
+    parent-side ones."""
+    ctx = multiprocessing.get_context("spawn")
+    with ctx.Pool(2) as pool:
+        remote = pool.map(describe_strategy, STRATEGIES)
+    assert remote == [describe_strategy(n) for n in STRATEGIES]
+
+
+@pytest.mark.parametrize("name", ["ecoserve", "vllm", "mooncake"])
+def test_scale_up_down_protocol(name):
+    system = make_system(name, COST, 4, MIX)
+    n0 = len(system.instances)
+    inst = system.scale_up()
+    assert inst in system.instances and len(system.instances) == n0 + 1
+    gone = system.scale_down()
+    assert gone is not None and gone not in system.instances
+    assert len(system.instances) == n0
+
+
+# --------------------------------------------------------------------- #
+# the "base+modifier" grammar
+# --------------------------------------------------------------------- #
+def test_registered_composition_and_grammar_agree():
+    reg = REGISTRY["vllm+priority"]
+    assert reg.queue == "slo-priority"
+    assert reg.admission == "backpressure"
+    assert reg.base == "vllm"
+
+
+def test_grammar_composes_unregistered_variants():
+    spec = resolve_strategy("mooncake+spf")
+    assert spec.name == "mooncake+spf"
+    assert spec.base == "mooncake"
+    assert spec.queue == "shortest-prompt"
+    assert spec.admission == "backpressure"     # immediate -> upgraded
+    assert spec.ctor_kwargs == {"prefill_ratio": 0.25}
+    # a composition is NOT the paper's baseline — provenance must say so
+    assert "composed with +spf" in spec.provenance
+    # double-plus bases parse via longest-prefix match
+    spec = resolve_strategy("ecoserve+++priority")
+    assert spec.base == "ecoserve" and spec.ctor_kwargs["plus_plus"]
+
+
+def test_grammar_keeps_non_immediate_admission():
+    """EcoServe's timeout-forced admission must survive a queue swap —
+    only immediate admission is upgraded to backpressure (a discipline
+    can never act on an always-empty queue)."""
+    spec = resolve_strategy("ecoserve+priority")
+    assert spec.queue == "slo-priority"
+    assert spec.admission is None     # family default: timeout-forced
+    assert describe_strategy("ecoserve+priority")["admission"] == \
+        "timeout-forced:4"
+
+
+def test_unknown_strategy_and_modifier_raise():
+    with pytest.raises(KeyError, match="unknown strategy"):
+        resolve_strategy("no-such-system")
+    with pytest.raises(KeyError, match="unknown strategy"):
+        resolve_strategy("vllm+turbo")
+    with pytest.raises(KeyError, match="unknown system family"):
+        StrategySpec(name="x", base="no-such-family")
+
+
+def test_spec_build_overrides_win_over_frozen_kwargs():
+    system = make_system("distserve", COST, 4, MIX, prefill_ratio=0.5)
+    assert len(system.prefill_insts) == 2       # 0.5, not the spec's 0.25
+
+
+# --------------------------------------------------------------------- #
+# FIFO drain == pre-redesign deque loop (property)
+# --------------------------------------------------------------------- #
+class _ScriptedAdmission(AdmissionPolicy):
+    """Replays a scripted admit/deny sequence in try order."""
+
+    name = "scripted"
+
+    def __init__(self, decisions):
+        self.decisions = list(decisions)
+        self.dummy = object()
+
+    def try_admit(self, system, req, now):
+        ok = self.decisions.pop(0) if self.decisions else False
+        return self.dummy if ok else None
+
+
+class _EngineStub:
+    def activate(self, inst):
+        pass
+
+
+def _legacy_drain(reqs, decisions, max_tries=64):
+    """The pre-policy-API EcoServeSystem._drain_queue, verbatim."""
+    queue = deque(reqs)
+    decisions = list(decisions)
+    admitted = []
+    tries = 0
+    fails = 0
+    still = deque()
+    while queue and tries < max_tries and fails < 4:
+        req = queue.popleft()
+        tries += 1
+        ok = decisions.pop(0) if decisions else False
+        if ok:
+            admitted.append(req.rid)
+            fails = 0
+        else:
+            still.append(req)
+            fails += 1
+    still.extend(queue)
+    return admitted, [r.rid for r in still]
+
+
+def _policy_drain(reqs, decisions, max_tries=64):
+    system = PolicySystemBase(None, 0, None,
+                              admission=_ScriptedAdmission(decisions))
+    admitted_order = []
+    orig = system.admission.try_admit
+
+    def spy(sys_, req, now):
+        inst = orig(sys_, req, now)
+        if inst is not None:
+            admitted_order.append(req.rid)
+        return inst
+
+    system.admission.try_admit = spy
+    system.queue.extend(reqs)
+    system._drain_queue(0.0, _EngineStub(), max_tries=max_tries)
+    return admitted_order, [r.rid for r in system.queue]
+
+
+def check_fifo_drain_matches_legacy(n_reqs, decisions, max_tries=64):
+    reqs = [Request(rid=i, arrival_time=float(i), prompt_len=8,
+                    output_len=4) for i in range(n_reqs)]
+    want = _legacy_drain(reqs, decisions, max_tries)
+    got = _policy_drain(reqs, decisions, max_tries)
+    assert got == want, (n_reqs, decisions[:12], max_tries)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=200)
+    @given(n_reqs=st.integers(0, 120),
+           decisions=st.lists(st.booleans(), max_size=120),
+           max_tries=st.sampled_from([1, 4, 64]))
+    def test_fifo_drain_bit_identical_property(n_reqs, decisions,
+                                               max_tries):
+        check_fifo_drain_matches_legacy(n_reqs, decisions, max_tries)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_fifo_drain_bit_identical_seeded(seed):
+    rng = random.Random(seed)
+    for _ in range(40):
+        n = rng.randrange(0, 120)
+        decisions = [rng.random() < rng.choice((0.1, 0.5, 0.9))
+                     for _ in range(rng.randrange(0, 120))]
+        check_fifo_drain_matches_legacy(
+            n, decisions, rng.choice((1, 4, 64)))
+
+
+def test_fifo_drain_gives_up_after_four_consecutive_failures():
+    admitted, left = _policy_drain(
+        [Request(rid=i, arrival_time=0.0, prompt_len=1, output_len=1)
+         for i in range(10)],
+        [True, False, False, False, False, True])
+    assert admitted == [0]
+    assert left == list(range(1, 10))   # untouched tail keeps order
+
+
+# --------------------------------------------------------------------- #
+# acceptance: composed strategies end-to-end through the runner
+# --------------------------------------------------------------------- #
+def test_runner_end_to_end_priority_beats_blind_vllm_on_alpaca():
+    """ISSUE acceptance: ``ExperimentRunner(strategies=("vllm",
+    "vllm+priority"), tenants=...)`` runs end-to-end and the priority
+    variant achieves strictly higher alpaca-class attainment."""
+    runner = ExperimentRunner(
+        strategies=("vllm", "vllm+priority"), scenarios=("poisson",),
+        rates=(6.0,), tenants=("alpaca", "longbench"),
+        model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
+        duration=20.0, warmup=3.0, base_seed=42, n_workers=1)
+    grid = ExperimentRunner.grid(runner.run())
+    blind = grid["vllm"]["poisson"][6.0]["attainment_by_class"]["alpaca"]
+    aware = grid["vllm+priority"]["poisson"][6.0][
+        "attainment_by_class"]["alpaca"]
+    assert aware > blind, (aware, blind)
+
+
+def test_runner_rows_carry_describe_bundle():
+    runner = ExperimentRunner(
+        strategies=("sarathi+priority",), scenarios=("poisson",),
+        rates=(2.0,), model="llama-30b", hw="L20", tp=4, pp=1,
+        n_instances=2, duration=5.0, warmup=1.0, base_seed=7, n_workers=1)
+    cell = runner.run()["cells"][0]
+    assert cell["system"]["strategy"] == "sarathi+priority"
+    assert cell["system"]["queue"] == "slo-priority"
+    assert cell["system"]["base"] == "sarathi"
+
+
+def test_single_class_priority_composition_is_well_behaved():
+    """Under one SLO class the EDF queue degrades to FIFO order; the
+    composed system must still serve to completion."""
+    slo = DATASET_SLOS["sharegpt"]
+    m = run_once(functools.partial(make_system, "vllm+priority", COST, 4,
+                                   slo),
+                 make_mixed_scenario("poisson", ["sharegpt"], 4.0, seed=3),
+                 4.0, slo, duration=20.0, warmup=3.0, seed=3)
+    assert m["completion"] > 0.9

@@ -74,6 +74,32 @@ def test_tenant_golden_shows_slo_aware_admission_helps_tight_class():
             assert eco > other, (scen, baseline, eco, other)
 
 
+def test_tenant_golden_priority_composition_beats_blind_vllm():
+    """ISSUE acceptance (pinned in the golden, so it can never silently
+    regress): the SLO-aware NoDG composition ``vllm+priority`` keeps the
+    tight-TTFT alpaca class strictly healthier than blind vLLM on every
+    traffic shape of the mixed-tenant smoke grid; same for sarathi's."""
+    grid = ExperimentRunner.grid(ExperimentRunner.load(TENANT_GOLDEN))
+    for scen in ("poisson", "bursty"):
+        blind = grid["vllm"][scen][6.0]["attainment_by_class"]["alpaca"]
+        for aware_name in ("vllm+priority", "sarathi+priority"):
+            aware = grid[aware_name][scen][6.0][
+                "attainment_by_class"]["alpaca"]
+            assert aware > blind, (scen, aware_name, aware, blind)
+
+
+def test_tenant_golden_rows_are_self_documenting():
+    golden = ExperimentRunner.load(TENANT_GOLDEN)
+    for cell in golden["cells"]:
+        desc = cell["system"]
+        assert desc["strategy"] == cell["strategy"]
+        assert {"base", "queue", "admission", "routing",
+                "provenance"} <= set(desc)
+    by_strat = {c["strategy"]: c["system"] for c in golden["cells"]}
+    assert by_strat["vllm+priority"]["queue"] == "slo-priority"
+    assert by_strat["vllm"]["queue"] == "fifo"
+
+
 def test_static_scaling_golden_reproduced_bit_exactly():
     golden = ExperimentRunner.load(STATIC_GOLDEN)
     fresh = static_scaling_runner(n_workers=2).run()
@@ -105,6 +131,101 @@ def test_instance_count_axis_gives_distinct_specs_and_pivot():
     grid = ExperimentRunner.grid(ExperimentRunner.load(STATIC_GOLDEN))
     assert set(grid["ecoserve"]["poisson"]) == {2, 4}
     assert set(grid["ecoserve"]["poisson"][2]) == {6.0}
+
+
+def test_tenant_shares_and_shapes_thread_through_runner():
+    """Rich tenant entries: explicit shares and per-tenant arrival
+    shapes flow from the grid spec into the scenario, and the seed-key
+    encoding distinguishes them from (and preserves) the legacy
+    equal-share cells."""
+    rich = (("alpaca", 0.7, "bursty"), ("longbench", 0.3, "diurnal"))
+    r = ExperimentRunner(
+        strategies=("vllm",), scenarios=("poisson",), rates=(6.0,),
+        tenants=rich, model="llama-30b", hw="L20", tp=4, pp=1,
+        n_instances=4, duration=20.0, warmup=3.0, base_seed=42)
+    spec = r.cells()[0]
+    assert spec["tenants"] == [["alpaca", 0.7, "bursty"],
+                               ["longbench", 0.3, "diurnal"]]
+    # legacy plain-name tuples keep their PR 3 seed encoding...
+    legacy = tenant_runner().cells()[0]
+    assert legacy["seed"] == cell_seed(
+        42, legacy["strategy"], "poisson", 6.0,
+        extra="tenants=alpaca+longbench")
+    # ...while share/shape-qualified entries get their own seeds
+    assert spec["seed"] == cell_seed(
+        42, "vllm", "poisson", 6.0,
+        extra="tenants=alpaca:0.7:bursty+longbench:0.3:diurnal")
+    assert spec["seed"] != cell_seed(
+        42, "vllm", "poisson", 6.0, extra="tenants=alpaca+longbench")
+    # the scenario the worker builds honours both knobs
+    scen = make_mixed_scenario(spec["scenario"], spec["tenants"],
+                               spec["rate"], seed=spec["seed"])
+    by_class = {t.slo_class: t for t in scen.tenants}
+    assert by_class["alpaca"].arrivals.rate == pytest.approx(0.7 * 6.0)
+    assert by_class["longbench"].arrivals.rate == pytest.approx(0.3 * 6.0)
+    assert type(by_class["alpaca"].arrivals).__name__ == "BurstyArrivals"
+    assert type(by_class["longbench"].arrivals).__name__ == \
+        "DiurnalArrivals"
+
+
+def test_mixed_scenario_share_remainder_and_identity_seeding():
+    """Entries without an explicit share split the unclaimed remainder;
+    giving one tenant a share/shape never moves another tenant's RNG
+    stream (identity seeding)."""
+    base = make_mixed_scenario("poisson", ["alpaca", "longbench"], 8.0,
+                               seed=5)
+    rich = make_mixed_scenario("poisson",
+                               [("alpaca", 0.5), "longbench"], 8.0, seed=5)
+    assert {t.slo_class: t.arrivals.rate for t in rich.tenants} == \
+        {"alpaca": 4.0, "longbench": 4.0}
+    lb_base = [r for r in base.generate(60.0) if r.slo_class == "longbench"]
+    shaped = make_mixed_scenario(
+        "poisson", [("alpaca", 0.5, "bursty"), "longbench"], 8.0, seed=5)
+    lb_shaped = [r for r in shaped.generate(60.0)
+                 if r.slo_class == "longbench"]
+    assert [(r.arrival_time, r.prompt_len, r.output_len)
+            for r in lb_base] == \
+        [(r.arrival_time, r.prompt_len, r.output_len) for r in lb_shaped]
+    with pytest.raises(ValueError, match="shares sum"):
+        make_mixed_scenario("poisson",
+                            [("alpaca", 0.8), ("longbench", 0.8)], 8.0)
+    # all-explicit shares must cover the rate — a silent shortfall would
+    # mislabel the row's offered load
+    with pytest.raises(ValueError, match="not 1"):
+        make_mixed_scenario("poisson",
+                            [("alpaca", 0.5), ("longbench", 0.3)], 8.0)
+
+
+def test_tp_axis_gives_distinct_seeded_cells_and_pivot():
+    """``tp=`` as a grid axis (Fig. 11 fold): ints or (tp, pp) pairs,
+    each seed-disambiguated; the pivot grows a tp{T}pp{P} level."""
+    r = ExperimentRunner(
+        strategies=("ecoserve",), scenarios=("poisson",), rates=(6.0,),
+        tp=((4, 1), (2, 2)), n_instances=4,
+        model="llama-30b", hw="L20", duration=10.0, warmup=2.0,
+        base_seed=42)
+    specs = r.cells()
+    assert [(s["tp"], s["pp"]) for s in specs] == [(4, 1), (2, 2)]
+    assert len({s["seed"] for s in specs}) == 2
+    # a scalar tp keeps the legacy seed (empty extra)
+    scalar = ExperimentRunner(
+        strategies=("ecoserve",), scenarios=("poisson",), rates=(6.0,),
+        tp=4, pp=1, n_instances=4, model="llama-30b", hw="L20",
+        duration=10.0, warmup=2.0, base_seed=42).cells()[0]
+    assert scalar["seed"] == cell_seed(42, "ecoserve", "poisson", 6.0)
+    fake = {"cells": [
+        {"strategy": "ecoserve", "scenario": "poisson", "rate": 6.0,
+         "n_instances": 4, "tp": t, "pp": p, "metrics": {"x": i}}
+        for i, (t, p) in enumerate([(4, 1), (2, 2)])]}
+    grid = ExperimentRunner.grid(fake)
+    assert grid["ecoserve"]["poisson"]["tp4pp1"][6.0] == {"x": 0}
+    assert grid["ecoserve"]["poisson"]["tp2pp2"][6.0] == {"x": 1}
+
+
+def test_slo_override_is_single_class_only():
+    with pytest.raises(ValueError, match="single-class"):
+        ExperimentRunner(tenants=("alpaca", "longbench"),
+                         slo_override=(5.0, 0.3))
 
 
 def test_tenant_cells_carry_tenants_and_meta_roundtrip():
