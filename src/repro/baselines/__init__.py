@@ -156,6 +156,19 @@ register(StrategySpec(
     queue="slo-priority", admission="backpressure",
     provenance="ROADMAP SLO-aware NoDG: EDF queue over per-class TTFT "
                "deadlines + backpressure admission on Sarathi machinery"))
+# ROADMAP policy-composition slice (PR 5): a slack-guarded NoDG and a
+# routing ablation, both also reachable through the grammar.
+register(StrategySpec(
+    name="vllm+slack", base="vllm", admission="kv-guard",
+    provenance="ROADMAP policy composition: slack-guarded NoDG — "
+               "admission holds KV headroom for each request's full "
+               "footprint (the Algorithm 2 idea restated for a replica "
+               "whose only hard constraint is KV memory)"))
+register(StrategySpec(
+    name="ecoserve+rr", base="ecoserve", routing="round-robin",
+    provenance="ROADMAP policy composition: EcoServe machinery under "
+               "blind round-robin placement — ablates Algorithm 1 "
+               "inter-instance routing"))
 
 STRATEGIES: Tuple[str, ...] = tuple(REGISTRY)
 
@@ -177,9 +190,19 @@ def _with_queue(queue: str) -> Callable[[StrategySpec], StrategySpec]:
     return apply
 
 
+def _with(field: str, value: str) -> Callable[[StrategySpec], StrategySpec]:
+    """Swap one policy slot, other slots untouched.  (``_with_queue``
+    stays separate: a queue swap also upgrades immediate admission.)"""
+    def apply(spec: StrategySpec) -> StrategySpec:
+        return dataclasses.replace(spec, **{field: value})
+    return apply
+
+
 MODIFIERS: Dict[str, Callable[[StrategySpec], StrategySpec]] = {
     "priority": _with_queue("slo-priority"),
     "spf": _with_queue("shortest-prompt"),
+    "rr": _with("routing", "round-robin"),
+    "slack": _with("admission", "kv-guard"),
 }
 
 

@@ -12,8 +12,9 @@ decisions into small strategy objects that ``PolicySystemBase``
 * ``AdmissionPolicy`` — whether a request may enter an instance *now*
   (immediate; slack-guarded through constraint-checked routing;
   timeout-forced, the paper's "continuous stream" fallback;
-  backpressure, which defers to the queue once the target instance has
-  a full prefill slot of backlog).
+  kv-guard, the slack-guarded NoDG variant holding KV headroom for each
+  request's full footprint; backpressure, which defers to the queue
+  once the target instance has a full prefill slot of backlog).
 * ``RoutingPolicy`` — which instance an admission attempt targets
   (least-KV-loaded replica; round-robin; macro-instance rolling
   activation, Algorithm 1; FuDG prefill/decode partitioning).
@@ -326,6 +327,36 @@ class TimeoutForcedAdmission(SlackGuardedAdmission):
         return f"{self.name}:{_fmt(self.timeout_factor)}"
 
 
+class KVGuardAdmission(AdmissionPolicy):
+    """Slack-guarded NoDG admission: route normally, but admit only when
+    the target instance has KV headroom for the request's *whole*
+    footprint (prompt + maximum output tokens) inside
+    ``headroom_fraction`` x capacity — otherwise the request waits in
+    the system queue.  The NoDG counterpart of EcoServe's Algorithm 2
+    guard: instead of slack over predicted slot times, a replica
+    guards the one resource whose exhaustion it cannot schedule around
+    (KV memory), deferring work rather than overcommitting."""
+
+    name = "kv-guard"
+
+    def __init__(self, headroom_fraction: float = 0.9):
+        self.headroom_fraction = headroom_fraction
+
+    def try_admit(self, system, req, now):
+        inst = system.routing.select(system, req, now)
+        if inst is None:
+            return None
+        footprint = req.prompt_len + req.output_len
+        budget = self.headroom_fraction * inst.kv_capacity_tokens
+        if inst.kv_tokens_used() + footprint <= budget:
+            inst.admit(req, now)
+            return inst
+        return None
+
+    def describe(self):
+        return f"{self.name}:{_fmt(self.headroom_fraction)}"
+
+
 class BackpressureAdmission(AdmissionPolicy):
     """Defer to the system queue once the routed instance already holds
     ``max_backlog_fraction`` x its ``max_prefill_tokens`` of pending
@@ -368,6 +399,7 @@ ADMISSION_POLICIES = {
     ImmediateAdmission.name: ImmediateAdmission,
     SlackGuardedAdmission.name: SlackGuardedAdmission,
     TimeoutForcedAdmission.name: TimeoutForcedAdmission,
+    KVGuardAdmission.name: KVGuardAdmission,
     BackpressureAdmission.name: BackpressureAdmission,
 }
 
@@ -401,8 +433,8 @@ def make_queue_discipline(
 
 def make_admission(spec: Union[str, AdmissionPolicy]) -> AdmissionPolicy:
     """``"immediate"`` / ``"slack-guarded"`` / ``"timeout-forced[:F]"`` /
-    ``"backpressure[:F]"`` (``:F`` is the policy's float parameter) or an
-    instance (passed through)."""
+    ``"kv-guard[:F]"`` / ``"backpressure[:F]"`` (``:F`` is the policy's
+    float parameter) or an instance (passed through)."""
     return _make(ADMISSION_POLICIES, spec, AdmissionPolicy, "admission")
 
 

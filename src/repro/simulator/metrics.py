@@ -15,7 +15,8 @@ from __future__ import annotations
 from typing import Callable, Dict
 
 from repro.core.slo import (SLO, as_slo_class_set, attainment,
-                            attainment_summary, percentile_latencies)
+                            attainment_summary, percentile_latencies,
+                            request_meets_slo)
 from repro.simulator.engine import SimulationEngine
 from repro.simulator.workload import WorkloadGen, WorkloadProfile
 
@@ -38,16 +39,39 @@ def as_scenario(workload, rate: float, seed: int):
     raise TypeError(f"cannot build a scenario from {type(workload)!r}")
 
 
+def phase_edges(duration: float, warmup: float, phases: int):
+    """Boundaries of the per-phase attainment windows: ``phases`` equal
+    slices of the scored span [warmup, duration).  The one definition
+    shared by ``run_once`` and consumers that map other per-phase data
+    (controller trajectories, offline-optimal sweeps) onto the same
+    windows."""
+    return [warmup + (duration - warmup) * i / phases
+            for i in range(phases + 1)]
+
+
 def run_once(system_factory: Callable[[], object], workload,
              rate: float, slo, duration: float = 240.0,
-             warmup: float = None, seed: int = 0) -> Dict[str, float]:
+             warmup: float = None, seed: int = 0,
+             control=None, phases=None) -> Dict[str, float]:
     """One simulation at a fixed rate.  ``slo`` is a bare ``SLO`` or an
     ``SLOClassSet``; a heterogeneous set adds ``attainment_by_class``
-    (per-class grid) and ``attainment_min`` (worst class) to the row."""
+    (per-class grid) and ``attainment_min`` (worst class) to the row.
+
+    ``control`` installs the closed-loop autoscaler (``repro.control``):
+    a controller spec string (``"band"``, ``"threshold"``,
+    ``"band:max=8,delay=2"``) or a ``ScalingController`` instance; the
+    row then carries the recorded ``timeline`` (scale events + instance
+    trajectory).  ``phases`` splits the scored window into attainment
+    phases — an int for equal windows over [warmup, duration) or an
+    explicit boundary sequence — adding ``attainment_by_phase`` (each
+    phase scored over requests *arriving* in it, unfinished ones
+    counting as misses, so post-shift dips are visible) and the
+    min-over-phases scalar ``attainment_phase_min``."""
     system = system_factory()
     warmup = duration * 0.15 if warmup is None else min(warmup,
                                                         duration * 0.5)
     classes = as_slo_class_set(slo)
+    harness = None
     gen = as_scenario(workload, rate, seed)
     # a prebuilt scenario carries its own rate; report that one so a
     # mismatched ``rate`` argument can't mislabel the result row
@@ -58,6 +82,12 @@ def run_once(system_factory: Callable[[], object], workload,
         rate = scen_rate
     reqs = gen.generate(duration)
     engine = SimulationEngine(system)
+    if control is not None:
+        # imported lazily: repro.control depends only on repro.core, but
+        # static cells must not pay (or require) the import
+        from repro.control import ControlLoopHarness, make_controller
+        harness = ControlLoopHarness(
+            system, engine, make_controller(control)).attach()
     # allow in-flight work to drain past the arrival window
     engine.run(reqs, horizon=duration * 2.5)
     scored = [r for r in engine.finished if r.arrival_time >= warmup]
@@ -85,6 +115,23 @@ def run_once(system_factory: Callable[[], object], workload,
     if per_class is not None:
         out["attainment_by_class"] = per_class
         out["attainment_min"] = att_min
+    if phases:
+        edges = (phase_edges(duration, warmup, phases)
+                 if isinstance(phases, int) else [float(b) for b in phases])
+        met = {id(r) for r in scored
+               if request_meets_slo(r, classes.for_request(r))}
+        by_phase = []
+        for lo, hi in zip(edges, edges[1:]):
+            sub = [r for r in submitted if lo <= r.arrival_time < hi]
+            # an empty phase is vacuously fine (same contract as the
+            # zero-submission branch above)
+            by_phase.append(
+                sum(1 for r in sub if id(r) in met) / len(sub)
+                if sub else 1.0)
+        out["attainment_by_phase"] = by_phase
+        out["attainment_phase_min"] = min(by_phase) if by_phase else 1.0
+    if harness is not None:
+        out["timeline"] = harness.timeline.summary()
     out.update(percentile_latencies(scored))
     return out
 

@@ -46,6 +46,15 @@ seeds):
 * ``tp=((4, 1), (2, 2))`` — the parallelism degree as a grid axis
   (ints or (tp, pp) pairs); with ``slo_override=(ttft, tpot)`` this
   folds the Fig. 11 PP-compatibility bench into the runner.
+* ``autoscale=(None, "band", "threshold")`` — the closed-loop
+  autoscaling controller (``repro.control``) as a grid axis; ``None``
+  cells run static.  Deliberately seed-neutral: every controller variant
+  replays the identical arrival sequence, so attainment deltas isolate
+  the controller.  ``phases=K`` adds per-phase attainment columns
+  (fixed-rate mode only; goodput mode rejects ``autoscale``).
+  Scenario kinds ``"trace:azure"`` / ``"trace:burstgpt"`` replay the
+  converted real-trace excerpts (``repro.traces``) rate-normalized to
+  the cell rate.
 
 Cells run through ``imap_unordered`` with per-cell error capture: a
 crashing cell yields a row carrying its spec and the error string instead
@@ -76,6 +85,7 @@ HARDWARE = {"L20": GPU_L20, "A800": GPU_A800, "tpu-v5e": TPU_V5E_SIM}
 # the *_by_class / *_min keys appear only on multi-tenant cells, so
 # single-class golden grids keep their legacy rows)
 SUMMARY_KEYS = ("attainment", "attainment_min", "attainment_by_class",
+                "attainment_by_phase", "attainment_phase_min", "timeline",
                 "completion", "finished",
                 "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
 GOODPUT_SUMMARY_KEYS = ("goodput", "target", "probes", "attainment",
@@ -157,9 +167,14 @@ def _run_cell(spec: Dict) -> Dict:
     else:
         scenario = make_scenario(spec["scenario"], spec["workload"],
                                  spec["rate"], seed=spec["seed"])
+    run_kw = {}
+    if spec.get("autoscale"):        # None = static cell, no control loop
+        run_kw["control"] = spec["autoscale"]
+    if spec.get("phases"):
+        run_kw["phases"] = spec["phases"]
     metrics = run_once(factory, scenario, spec["rate"], slo,
                        duration=spec["duration"], warmup=spec["warmup"],
-                       seed=spec["seed"])
+                       seed=spec["seed"], **run_kw)
     summary = {k: metrics[k] for k in SUMMARY_KEYS if k in metrics}
     return {**spec, "metrics": summary, "system": describe}
 
@@ -208,6 +223,17 @@ class ExperimentRunner:
     # pinned (ttft, tpot) overriding the workload's Table 4 budgets
     # (single-class only; the PP sweep relaxes TPOT past any workload's)
     slo_override: Optional[Sequence[float]] = None
+    # autoscaling axis (closed-loop control plane, repro.control): None =
+    # every cell static (legacy); a controller spec string ("band",
+    # "threshold", "band:max=8") or a sequence of them — None entries
+    # mean "static baseline" — makes the controller a grid level.
+    # Deliberately NOT folded into cell seeds: an autoscaled cell and its
+    # static baseline replay the IDENTICAL arrival sequence, so their
+    # attainment difference is the controller's doing alone.
+    autoscale: Union[None, str, Sequence[Optional[str]]] = None
+    # split the scored window into this many equal attainment phases
+    # (rows gain attainment_by_phase / attainment_phase_min)
+    phases: Optional[int] = None
     duration: float = 60.0
     warmup: Optional[float] = None
     base_seed: int = 0
@@ -233,6 +259,11 @@ class ExperimentRunner:
         if self.tenants is not None and self.slo_override is not None:
             raise ValueError("slo_override is single-class only; tenant "
                              "cells score against per-class Table 4 SLOs")
+        if self.autoscale is not None and self.mode == "goodput":
+            raise ValueError("autoscale cells are fixed-rate only: the "
+                             "goodput search's rate knob and the "
+                             "controller's capacity knob would chase "
+                             "each other")
 
     # ---- grid axes ---------------------------------------------------- #
     def _instance_counts(self) -> Tuple[int, ...]:
@@ -245,6 +276,13 @@ class ExperimentRunner:
             return ((self.tp, self.pp),)
         return tuple((t, self.pp) if isinstance(t, int)
                      else (int(t[0]), int(t[1])) for t in self.tp)
+
+    def _autoscale_axis(self) -> Tuple[Optional[str], ...]:
+        if self.autoscale is None:
+            return (None,)
+        if isinstance(self.autoscale, str):
+            return (self.autoscale,)
+        return tuple(self.autoscale)
 
     def _norm_tenants(self) -> Optional[List]:
         """JSON-able tenant entries for cell specs: names stay strings
@@ -297,6 +335,8 @@ class ExperimentRunner:
             common["tenants"] = tenants
         if self.slo_override is not None:
             common["slo_override"] = [float(x) for x in self.slo_override]
+        if self.phases is not None:
+            common["phases"] = int(self.phases)
         out = []
         if self.mode == "goodput":
             common.update(mode="goodput",
@@ -325,7 +365,8 @@ class ExperimentRunner:
                 for rate in self.rates:
                     for n in self._instance_counts():
                         for t, p in self._tp_pairs():
-                            out.append({**common, "strategy": strat,
+                            for ctrl in self._autoscale_axis():
+                                cell = {**common, "strategy": strat,
                                         "scenario": scen, "rate": rate,
                                         "n_instances": n,
                                         "tp": t, "pp": p,
@@ -333,7 +374,13 @@ class ExperimentRunner:
                                             self.base_seed, strat, scen,
                                             rate,
                                             extra=self._seed_extra(
-                                                n, (t, p)))})
+                                                n, (t, p)))}
+                                if self.autoscale is not None:
+                                    # same seed across controller values:
+                                    # static vs autoscaled cells replay
+                                    # identical arrivals by design
+                                    cell["autoscale"] = ctrl
+                                out.append(cell)
         return out
 
     def run(self) -> Dict:
@@ -376,6 +423,12 @@ class ExperimentRunner:
             meta.pop("slo_override")
         else:
             meta["slo_override"] = [float(x) for x in self.slo_override]
+        if self.autoscale is None:      # and for the autoscale/phase axes
+            meta.pop("autoscale")
+        else:
+            meta["autoscale"] = list(self._autoscale_axis())
+        if self.phases is None:
+            meta.pop("phases")
         if not isinstance(self.n_instances, int):
             meta["n_instances"] = list(self.n_instances)
         if not isinstance(self.tp, int):
@@ -405,11 +458,14 @@ class ExperimentRunner:
         """Pivot the flat cell list to [strategy][scenario][rate]
         (fixed mode) or [strategy][scenario] (goodput mode).  Swept axes
         insert their own levels after [scenario] so cells can't overwrite
-        each other: a ``tp`` sweep keys ``"tp{T}pp{P}"`` and an
-        ``n_instances`` sweep keys the count, in that order."""
+        each other: a ``tp`` sweep keys ``"tp{T}pp{P}"``, an
+        ``n_instances`` sweep keys the count, and an ``autoscale`` sweep
+        keys the controller spec (``"static"`` for None), in that
+        order."""
         cells = results["cells"]
         multi_n = len({c.get("n_instances") for c in cells}) > 1
         multi_tp = len({(c.get("tp"), c.get("pp")) for c in cells}) > 1
+        multi_as = len({c.get("autoscale") for c in cells}) > 1
         out: Dict[str, Dict[str, Dict]] = {}
         for cell in cells:
             leaf = cell.get("metrics", cell)
@@ -418,6 +474,8 @@ class ExperimentRunner:
                 keys.append(f"tp{cell['tp']}pp{cell['pp']}")
             if multi_n:
                 keys.append(cell["n_instances"])
+            if multi_as:
+                keys.append(cell.get("autoscale") or "static")
             if cell.get("mode") != "goodput":
                 keys.append(cell["rate"])
             node = out.setdefault(cell["strategy"], {})
@@ -460,10 +518,15 @@ def goodput_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
     duration/lo pairing keeps >= ~24 scored requests per probe so a
     single end-of-window straggler can't sink the completion factor.
     ``vllm+priority`` (a composed ``StrategySpec``) rides along so the
-    policy-grammar construction path is exercised by the frontier too."""
+    policy-grammar construction path is exercised by the frontier too.
+    The strategy rows cover all four paper baselines (sarathi/distserve
+    joined in PR 5) and the shapes cover all four rate-parameterized
+    arrival processes — per-cell CRC seeds mean the widened grid keeps
+    every pre-existing cell's metrics bit-exact."""
     return ExperimentRunner(
-        strategies=("ecoserve", "vllm", "mooncake", "vllm+priority"),
-        scenarios=("poisson", "bursty"),
+        strategies=("ecoserve", "vllm", "sarathi", "distserve",
+                    "mooncake", "vllm+priority"),
+        scenarios=("poisson", "bursty", "diurnal", "ramp"),
         mode="goodput", target_attainment=0.9,
         goodput_lo=1.0, goodput_hi=24.0, goodput_tol=0.35,
         model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
@@ -488,6 +551,32 @@ def tenant_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
         tenants=("alpaca", "longbench"),
         model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
         duration=20.0, warmup=3.0,
+        base_seed=42, n_workers=n_workers)
+
+
+def dynamic_scaling_runner(n_workers: Optional[int] = None
+                           ) -> ExperimentRunner:
+    """The canonical closed-loop autoscaling grid (paper Fig. 10 under
+    non-stationary traffic); pinned by tests/golden/dynamic_scaling.json.
+
+    EcoServe under every load-shifting shape — MMPP bursty, diurnal,
+    ramp, and the two converted real-trace excerpts (Azure LLM
+    inference, BurstGPT; ``repro.traces``) — each cell run three ways
+    over the IDENTICAL arrival sequence (autoscale is seed-neutral):
+    static 4-instance baseline (None), the closed-loop target-band
+    controller, and the trace-oblivious threshold baseline for ablation.
+    Rows carry per-phase attainment (6 phases) and the recorded scaling
+    timeline, so the golden pins both the attainment dips/recoveries and
+    the exact scale-decision sequence."""
+    return ExperimentRunner(
+        strategies=("ecoserve",),
+        scenarios=("bursty", "diurnal", "ramp",
+                   "trace:azure", "trace:burstgpt"),
+        rates=(16.0,),
+        autoscale=(None, "band", "threshold"),
+        phases=6,
+        model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
+        workload="sharegpt", duration=72.0, warmup=6.0,
         base_seed=42, n_workers=n_workers)
 
 

@@ -359,18 +359,51 @@ def _parse_trace(lines: Iterable[str]) -> Tuple[TraceRecord, ...]:
 
 @dataclasses.dataclass(frozen=True)
 class TraceReplay:
-    """Replays a frozen trace; arrivals past ``duration`` are dropped so a
-    long trace can drive a short experiment."""
+    """Replays a frozen trace; arrivals past ``duration`` are dropped so
+    a long trace can drive a short experiment.
+
+    ``loop=True`` tiles the trace instead: when the experiment window
+    outlives the trace span, the record sequence repeats end-to-end
+    (each pass offset by span + one mean inter-arrival gap, so the
+    time-averaged rate carries across the seam) until ``duration`` is
+    covered — a short rate-normalized excerpt can then drive a long
+    cell without most of the window being silent.
+    """
     name: str
     records: Tuple[TraceRecord, ...]
+    loop: bool = False
+
+    @property
+    def rate(self) -> float:
+        """Time-averaged arrival rate over the trace span (0.0 for
+        traces too short to define one); lets ``run_once`` label result
+        rows with the rate actually replayed."""
+        if len(self.records) < 2:
+            return 0.0
+        span = self.records[-1][0] - self.records[0][0]
+        return (len(self.records) - 1) / span if span > 0 else 0.0
 
     def generate(self, duration: float = None) -> List[Request]:
         reqs: List[Request] = []
-        for i, (t, plen, olen, cls) in enumerate(self.records):
-            if duration is not None and t >= duration:
-                continue
-            reqs.append(Request(rid=i, arrival_time=t, prompt_len=plen,
-                                output_len=olen, slo_class=cls))
+        tiled = (self.loop and duration is not None
+                 and len(self.records) >= 2 and self.rate > 0)
+        passes = 1
+        stride = 0.0
+        if tiled:
+            span = self.records[-1][0] - self.records[0][0]
+            stride = span + 1.0 / self.rate     # seam gap = mean gap
+            passes = max(1, math.ceil(duration / stride))
+        rid = 0
+        for k in range(passes):
+            off = k * stride
+            for t, plen, olen, cls in self.records:
+                t = t + off
+                if duration is not None and t >= duration:
+                    continue
+                reqs.append(Request(rid=rid, arrival_time=t,
+                                    prompt_len=plen, output_len=olen,
+                                    slo_class=cls))
+                rid += 1
         return reqs
 
     @staticmethod
@@ -410,7 +443,19 @@ def make_scenario(kind: str, profile: Union[str, WorkloadProfile],
 
     ``kind='replay'`` replays ``kw['trace']`` (a JSONL path) if given,
     else round-trips a Poisson workload through the trace codec.
+    ``kind='trace:<fixture>'`` (``"trace:azure"``, ``"trace:burstgpt"``)
+    replays a converted real-trace excerpt (``repro.traces``)
+    rate-normalized to ``rate`` — the replay is frozen data, so
+    ``profile`` and ``seed`` do not perturb it (lengths come from the
+    trace; the rate knob is a pure time dilation), but grids can still
+    sweep rates over real traffic shapes.
     """
+    if kind.startswith("trace:"):
+        if kw:
+            raise TypeError(f"trace kinds take no extra options, got {kw}")
+        # lazy: repro.traces imports this module for the replay codec
+        from repro.traces import fixture_replay
+        return fixture_replay(kind[len("trace:"):], rate=rate, loop=True)
     if isinstance(profile, str):
         profile = WORKLOADS[profile]
     if kind == "poisson":

@@ -1,0 +1,188 @@
+"""Deterministic regression layer for the closed-loop autoscaling stack.
+
+``tests/golden/dynamic_scaling.json`` pins the full dynamic-scaling grid
+bit-exactly — per-phase attainment AND the recorded scaling timeline
+(every decision time, direction, and pool size) for EcoServe under the
+load-shifting shapes and both converted real-trace excerpts, each run
+static / closed-loop (band) / threshold-ablation over identical
+arrivals.  Regenerate (after an *intentional* change) with:
+
+    PYTHONPATH=src python -m benchmarks.bench_scaling_dynamic --write-golden
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.simulator.runner import ExperimentRunner, dynamic_scaling_runner
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "dynamic_scaling.json"
+
+CONVERTED_TRACES = ("trace:azure", "trace:burstgpt")
+
+
+def _grid():
+    return ExperimentRunner.grid(ExperimentRunner.load(GOLDEN))
+
+
+def _rate():
+    return ExperimentRunner.load(GOLDEN)["meta"]["rates"][0]
+
+
+# --------------------------------------------------------------------- #
+# golden reproduction (the worker pool is part of what's under test:
+# cells must land identically regardless of scheduling order)
+# --------------------------------------------------------------------- #
+def test_dynamic_golden_reproduced_bit_exactly():
+    golden = ExperimentRunner.load(GOLDEN)
+    fresh = dynamic_scaling_runner(n_workers=2).run()
+    assert fresh["meta"] == golden["meta"], \
+        "dynamic-scaling grid spec drifted from the golden fixture"
+    want = json.dumps(golden["cells"], sort_keys=True)
+    got = json.dumps(fresh["cells"], sort_keys=True)
+    assert got == want, (
+        "dynamic-scaling grid no longer reproduces the golden metrics "
+        "(per-phase attainment or the scaling timeline moved); if "
+        "intentional, regenerate with `python -m benchmarks."
+        "bench_scaling_dynamic --write-golden` and review the diff")
+
+
+def test_dynamic_golden_covers_the_axes():
+    golden = ExperimentRunner.load(GOLDEN)
+    scenarios = {c["scenario"] for c in golden["cells"]}
+    controllers = {c["autoscale"] for c in golden["cells"]}
+    assert set(CONVERTED_TRACES) <= scenarios
+    assert {"bursty", "diurnal", "ramp"} <= scenarios
+    assert controllers == {None, "band", "threshold"}
+    # static and autoscaled cells share seeds on purpose: identical
+    # arrivals, so attainment deltas isolate the controller
+    by_key = {}
+    for c in golden["cells"]:
+        by_key.setdefault(c["scenario"], set()).add(c["seed"])
+    for scen, seeds in by_key.items():
+        assert len(seeds) == 1, (scen, seeds)
+
+
+# --------------------------------------------------------------------- #
+# the headline claims, pinned in the golden so they cannot silently rot
+# --------------------------------------------------------------------- #
+def test_closed_loop_beats_static_on_bursty_and_converted_traces():
+    """ISSUE acceptance: on the bursty and converted-trace scenarios the
+    closed-loop controller achieves strictly higher min-over-phases
+    attainment than the static 4-instance baseline."""
+    grid, rate = _grid(), _rate()
+    for scen in ("bursty",) + CONVERTED_TRACES:
+        static = grid["ecoserve"][scen]["static"][rate]
+        band = grid["ecoserve"][scen]["band"][rate]
+        assert band["attainment_phase_min"] > \
+            static["attainment_phase_min"], (
+                scen, band["attainment_phase_min"],
+                static["attainment_phase_min"])
+
+
+def test_attainment_dips_then_recovers_under_load_shifts():
+    """The Fig. 10 shape: under the closed loop, a load shift dips some
+    phase's attainment below the steady level and a later phase recovers
+    (the controller answered the shift) — while the static pool's dip
+    has no recovery story on at least one shape (min phase is terminal
+    or attainment stays collapsed)."""
+    grid, rate = _grid(), _rate()
+    recovered = 0
+    for scen in ("bursty", "diurnal", "ramp") + CONVERTED_TRACES:
+        phases = grid["ecoserve"][scen]["band"][rate][
+            "attainment_by_phase"]
+        dip = min(range(len(phases)), key=phases.__getitem__)
+        if dip + 1 < len(phases) and \
+                phases[dip + 1] > phases[dip] + 0.01:
+            recovered += 1
+    assert recovered >= 3, \
+        f"expected post-dip recovery on most shapes, saw {recovered}"
+    # the static diurnal cell collapses outright (its worst phase sits
+    # near zero) — that is the gap the control plane exists to close
+    static_diurnal = grid["ecoserve"]["diurnal"]["static"][rate]
+    band_diurnal = grid["ecoserve"]["diurnal"]["band"][rate]
+    assert static_diurnal["attainment_phase_min"] < 0.1
+    assert band_diurnal["attainment_phase_min"] > 0.9
+
+
+def test_timelines_respect_controller_contract():
+    """Every recorded scale-up lands after the modeled provisioning
+    delay; pool sizes stay inside the configured bounds; the static
+    cells carry no timeline at all."""
+    golden = ExperimentRunner.load(GOLDEN)
+    from repro.control import ControllerConfig
+    cfg = ControllerConfig()
+    for cell in golden["cells"]:
+        m = cell["metrics"]
+        if cell["autoscale"] is None:
+            assert "timeline" not in m
+            continue
+        tl = m["timeline"]
+        assert tl["trajectory"], cell["scenario"]
+        for p in tl["trajectory"]:
+            assert cfg.min_instances <= p["n"] <= cfg.max_instances
+            assert p["n"] <= p["n_target"] <= cfg.max_instances
+        for e in tl["events"]:
+            if e["action"] == "up":
+                assert e["t_effective"] == pytest.approx(
+                    e["t_decision"] + cfg.provision_delay)
+            else:
+                assert e["t_effective"] == e["t_decision"]
+        if cell["autoscale"] == "band":   # threshold has no cooldowns
+            ups = [e["t_decision"] for e in tl["events"]
+                   if e["action"] == "up"]
+            assert all(b - a >= cfg.cooldown_up - 1e-9
+                       for a, b in zip(ups, ups[1:])), cell["scenario"]
+
+
+def test_phase_columns_are_consistent():
+    golden = ExperimentRunner.load(GOLDEN)
+    n_phases = golden["meta"]["phases"]
+    for cell in golden["cells"]:
+        m = cell["metrics"]
+        assert len(m["attainment_by_phase"]) == n_phases
+        assert m["attainment_phase_min"] == min(m["attainment_by_phase"])
+
+
+# --------------------------------------------------------------------- #
+# trace scenario kinds through the runner plumbing
+# --------------------------------------------------------------------- #
+def test_trace_scenario_kind_resolves_fixture_replay():
+    from repro.simulator.scenarios import TraceReplay, make_scenario
+    sc = make_scenario("trace:azure", "sharegpt", 8.0)
+    assert isinstance(sc, TraceReplay)
+    assert sc.rate == pytest.approx(8.0)
+    reqs = sc.generate(10.0)
+    assert reqs and all(r.arrival_time < 10.0 for r in reqs)
+
+
+def test_trace_scenario_tiles_past_the_excerpt_span():
+    """A rate-normalized excerpt spans only (n-1)/rate seconds; scenario
+    cells loop it so the whole experiment window carries trace-shaped
+    traffic — no silent tail scoring vacuous phases."""
+    from repro.simulator.scenarios import make_scenario
+    sc = make_scenario("trace:azure", "sharegpt", 16.0)
+    span = (len(sc.records) - 1) / 16.0
+    duration = 4 * span
+    reqs = sc.generate(duration)
+    assert max(r.arrival_time for r in reqs) > 0.9 * duration
+    # time-averaged rate carries across the tile seams
+    assert len(reqs) / duration == pytest.approx(16.0, rel=0.05)
+    assert [r.rid for r in reqs] == list(range(len(reqs)))
+    # an un-looped replay of the same records keeps legacy semantics
+    from repro.simulator.scenarios import TraceReplay
+    flat = TraceReplay("flat", sc.records).generate(duration)
+    assert max(r.arrival_time for r in flat) <= span + 1e-9
+
+
+def test_trace_scenario_kind_rejects_unknown_fixture_and_kwargs():
+    from repro.simulator.scenarios import make_scenario
+    with pytest.raises(KeyError, match="fixture"):
+        make_scenario("trace:nope", "sharegpt", 8.0)
+    with pytest.raises(TypeError, match="no extra options"):
+        make_scenario("trace:azure", "sharegpt", 8.0, burst=2.0)
+
+
+def test_autoscale_axis_is_rejected_in_goodput_mode():
+    with pytest.raises(ValueError, match="autoscale"):
+        ExperimentRunner(mode="goodput", autoscale=("band",))

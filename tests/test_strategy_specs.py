@@ -136,6 +136,42 @@ def test_grammar_keeps_non_immediate_admission():
         "timeout-forced:4"
 
 
+def test_registered_slack_and_rr_compositions_round_trip():
+    """ISSUE satellite: the ``rr`` (round-robin routing) and ``slack``
+    (KV-guarded NoDG admission) modifiers are registered as
+    ``vllm+slack`` / ``ecoserve+rr`` and their ``describe()`` bundles
+    round-trip — spec-level describe == live-system describe, and the
+    registered spec agrees with what the grammar would compose."""
+    for name, want in (("vllm+slack", {"admission": "kv-guard:0.9",
+                                       "queue": "fifo",
+                                       "routing": "least-kv"}),
+                       ("ecoserve+rr", {"admission": "timeout-forced:4",
+                                        "queue": "fifo",
+                                        "routing": "round-robin"})):
+        assert name in REGISTRY
+        spec_d = describe_strategy(name)
+        live_d = make_system(name, COST, 2, MIX).describe()
+        for key in ("strategy", "base", "queue", "admission", "routing"):
+            assert spec_d[key] == live_d[key], (name, key)
+        for key, val in want.items():
+            assert spec_d[key] == val, (name, key, spec_d[key])
+    # the grammar composes the same policy bundles for other bases
+    spec = resolve_strategy("sarathi+slack")
+    assert spec.admission == "kv-guard"
+    spec = resolve_strategy("mooncake+rr")
+    assert spec.routing == "round-robin"
+
+
+def test_slack_and_rr_compositions_serve_to_completion():
+    from repro.simulator.scenarios import make_scenario
+    slo = DATASET_SLOS["sharegpt"]
+    for name in ("vllm+slack", "ecoserve+rr"):
+        m = run_once(functools.partial(make_system, name, COST, 4, slo),
+                     make_scenario("poisson", "sharegpt", 4.0, seed=5),
+                     4.0, slo, duration=15.0, warmup=2.0, seed=5)
+        assert m["completion"] > 0.9, (name, m)
+
+
 def test_unknown_strategy_and_modifier_raise():
     with pytest.raises(KeyError, match="unknown strategy"):
         resolve_strategy("no-such-system")

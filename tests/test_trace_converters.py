@@ -1,0 +1,224 @@
+"""Property tests for the real-trace ingestion pipeline
+(``repro.traces``): CSV converters, transforms, and the JSONL bridge
+into ``TraceReplay``.
+
+Contracts under test:
+
+* conversion -> ``records_to_jsonl`` -> ``TraceReplay.from_jsonl``
+  preserves ordering and every field (times, lengths, tags) exactly;
+* ``normalize_rate`` hits the target mean rate within float tolerance
+  and is a pure time dilation (lengths, tags, and order untouched);
+* converters sort + rebase arrivals, skip malformed/aborted rows, and
+  clamp zero generations;
+* ``downsample`` is deterministic per seed and order-preserving.
+
+Hypothesis drives the record-level properties (fixed-seed profile from
+``tests/conftest.py``); seeded fallbacks keep a bare interpreter green.
+"""
+import random
+
+import pytest
+
+from repro.simulator.scenarios import TraceReplay, _parse_trace
+from repro.traces import (clip_horizon, convert_azure, convert_burstgpt,
+                          downsample, load_fixture, normalize_rate,
+                          records_to_jsonl, rescale_time, trace_stats)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+
+def _records(specs):
+    """specs: [(dt_gap, prompt, out, tag)] -> converter-shaped records
+    (cumulative arrival times so they are sorted and start at 0)."""
+    out, t = [], 0.0
+    for gap, p, o, tag in specs:
+        rec = {"arrival_time": t, "prompt_len": p, "output_len": o}
+        if tag:
+            rec["slo_class"] = tag
+        out.append(rec)
+        t += gap
+    return out
+
+
+def check_jsonl_roundtrip_lossless(records) -> None:
+    """records -> JSONL -> TraceReplay must preserve order + fields."""
+    replay = TraceReplay("rt", _parse_trace(records_to_jsonl(records)))
+    reqs = replay.generate()
+    assert len(reqs) == len(records)
+    for i, (rec, req) in enumerate(zip(records, reqs)):
+        assert req.rid == i
+        assert req.arrival_time == rec["arrival_time"]
+        assert req.prompt_len == rec["prompt_len"]
+        assert req.output_len == rec["output_len"]
+        assert req.slo_class == rec.get("slo_class", "default")
+
+
+def check_rate_normalization(records, target) -> None:
+    normed = normalize_rate(records, target)
+    assert len(normed) == len(records)
+    # pure time dilation: lengths, tags, and relative order untouched
+    assert [(r["prompt_len"], r["output_len"], r.get("slo_class"))
+            for r in normed] == \
+        [(r["prompt_len"], r["output_len"], r.get("slo_class"))
+         for r in records]
+    times = [r["arrival_time"] for r in normed]
+    assert times == sorted(times)
+    assert trace_stats(normed)["mean_rate"] == \
+        pytest.approx(target, rel=1e-9)
+
+
+# --------------------------------------------------------------------- #
+# hypothesis drives
+# --------------------------------------------------------------------- #
+if HAVE_HYPOTHESIS:
+    SPEC = st.tuples(
+        st.floats(min_value=1e-3, max_value=60.0, allow_nan=False),
+        st.integers(1, 4096),
+        st.integers(1, 2048),
+        st.sampled_from((None, "alpaca", "sharegpt", "longbench")))
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(specs=st.lists(SPEC, min_size=0, max_size=40))
+    def test_jsonl_roundtrip_lossless_property(specs):
+        check_jsonl_roundtrip_lossless(_records(specs))
+
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(specs=st.lists(SPEC, min_size=2, max_size=40),
+           target=st.floats(min_value=0.05, max_value=64.0))
+    def test_rate_normalization_hits_target_property(specs, target):
+        check_rate_normalization(_records(specs), target)
+
+
+# --------------------------------------------------------------------- #
+# seeded fallbacks
+# --------------------------------------------------------------------- #
+def test_jsonl_roundtrip_lossless_seeded():
+    rng = random.Random(13)
+    for _ in range(15):
+        specs = [(rng.uniform(1e-3, 60.0), rng.randint(1, 4096),
+                  rng.randint(1, 2048),
+                  rng.choice((None, "alpaca", "longbench")))
+                 for _ in range(rng.randint(0, 40))]
+        check_jsonl_roundtrip_lossless(_records(specs))
+
+
+def test_rate_normalization_hits_target_seeded():
+    rng = random.Random(29)
+    for _ in range(15):
+        specs = [(rng.uniform(1e-3, 60.0), rng.randint(1, 4096),
+                  rng.randint(1, 2048), None)
+                 for _ in range(rng.randint(2, 40))]
+        check_rate_normalization(_records(specs),
+                                 rng.uniform(0.05, 64.0))
+
+
+# --------------------------------------------------------------------- #
+# converter schemas
+# --------------------------------------------------------------------- #
+AZURE_CSV = """TIMESTAMP,ContextTokens,GeneratedTokens
+2023-11-16 18:17:05.5000000,120,30
+2023-11-16 18:17:03.2910407,4402,13
+2023-11-16 18:17:04.0000000,256,0
+not-a-timestamp,9,9
+2023-11-16 18:17:06.1234567,0,50
+""".splitlines()
+
+BURSTGPT_CSV = """Timestamp,Model,Request tokens,Response tokens,Total tokens,Log Type
+10,GPT-4,900,250,1150,Conversation log
+2,ChatGPT,470,180,650,Conversation log
+5,ChatGPT,30,0,30,API log
+bogus,ChatGPT,1,1,2,Conversation log
+""".splitlines()
+
+
+def test_azure_converter_sorts_rebase_and_skips_bad_rows():
+    recs = convert_azure(AZURE_CSV)
+    # malformed timestamp and zero-context rows dropped
+    assert len(recs) == 3
+    assert recs[0]["arrival_time"] == 0.0
+    assert [r["prompt_len"] for r in recs] == [4402, 256, 120]
+    # sub-second spacing survives (7th fractional digit truncated)
+    assert recs[1]["arrival_time"] == pytest.approx(0.708960, abs=1e-5)
+    assert recs[2]["arrival_time"] == pytest.approx(2.208960, abs=1e-5)
+    # GeneratedTokens == 0 clamps to 1 (the simulator emits >= 1 token)
+    assert recs[1]["output_len"] == 1
+    assert all("slo_class" not in r for r in recs)
+
+
+def test_burstgpt_converter_tags_by_model_when_asked():
+    recs = convert_burstgpt(BURSTGPT_CSV, class_by_model=True)
+    assert len(recs) == 3
+    assert [r["arrival_time"] for r in recs] == [0.0, 3.0, 8.0]
+    assert [r["slo_class"] for r in recs] == \
+        ["sharegpt", "sharegpt", "longbench"]
+    assert recs[1]["output_len"] == 1          # zero response clamped
+    untagged = convert_burstgpt(BURSTGPT_CSV)
+    assert all("slo_class" not in r for r in untagged)
+    pinned = convert_burstgpt(BURSTGPT_CSV, slo_class="alpaca")
+    assert {r["slo_class"] for r in pinned} == {"alpaca"}
+
+
+def test_converters_reject_wrong_schema():
+    with pytest.raises(ValueError, match="missing column"):
+        convert_azure(BURSTGPT_CSV)
+    with pytest.raises(ValueError, match="missing column"):
+        convert_burstgpt(AZURE_CSV)
+
+
+# --------------------------------------------------------------------- #
+# transforms
+# --------------------------------------------------------------------- #
+def test_rescale_and_clip_compose():
+    recs = _records([(1.0, 10, 10, None)] * 10)
+    fast = rescale_time(recs, 0.5)
+    assert fast[-1]["arrival_time"] == pytest.approx(
+        recs[-1]["arrival_time"] * 0.5)
+    clipped = clip_horizon(fast, 2.0)
+    assert all(r["arrival_time"] < 2.0 for r in clipped)
+    assert len(clipped) < len(fast)
+    # purity: inputs untouched
+    assert recs[-1]["arrival_time"] == pytest.approx(9.0)
+
+
+def test_downsample_is_deterministic_and_order_preserving():
+    recs = _records([(0.5, i + 1, 5, None) for i in range(100)])
+    a = downsample(recs, 0.3, seed=7)
+    b = downsample(recs, 0.3, seed=7)
+    assert a == b
+    assert len(a) == 30
+    times = [r["arrival_time"] for r in a]
+    assert times == sorted(times)
+    c = downsample(recs, 0.3, seed=8)
+    assert c != a                    # a different seed moves the sample
+    with pytest.raises(ValueError, match="keep_fraction"):
+        downsample(recs, 0.0)
+
+
+# --------------------------------------------------------------------- #
+# checked-in fixtures stay bursty and replayable
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("name", ["azure", "burstgpt"])
+def test_fixture_excerpts_are_bursty_and_replayable(name):
+    recs = load_fixture(name)
+    stats = trace_stats(recs)
+    assert stats["n_requests"] >= 100
+    # the excerpts exist to exercise non-stationarity: CV(gaps) must
+    # stay well above the Poisson baseline of ~1
+    assert stats["burstiness_cv"] > 1.2, stats
+    check_jsonl_roundtrip_lossless(recs)
+    check_rate_normalization(recs, 8.0)
+
+
+def test_burstgpt_fixture_supports_model_class_tags():
+    recs = load_fixture("burstgpt", class_by_model=True)
+    assert {r["slo_class"] for r in recs} == {"sharegpt", "longbench"}
