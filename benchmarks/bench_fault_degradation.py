@@ -1,0 +1,191 @@
+"""Fault degradation: crashes + spot preemptions under load, EcoServe
+vs the FuDG baselines (the reliability claim behind the paper's
+homogeneous-pool argument).
+
+Runs ``fault_runner()`` — the canonical grid behind
+``tests/golden/fault_scenarios.json``: EcoServe, DistServe, and MoonCake
+(all with the ``migrate`` failure policy) on the bursty shape, each cell
+four ways over the identical arrival sequence — {fault-free, "gentle"
+interruption trace} x {static pool, closed-loop band controller}.  The
+gentle trace injects one crash at t=14 and one spot preemption with a
+2 s notice at t=26 (``repro.faults``; schedule seeded per cell, so the
+grid is bit-reproducible across worker counts).
+
+The headline assertions:
+
+* **graceful degradation** — EcoServe's min-phase attainment under the
+  interruption trace stays strictly above every FuDG baseline's: any
+  EcoServe survivor serves both phases, notice-window migrations move
+  decodes (KV intact) to peers, and the control loop's repair path
+  re-provisions the lost capacity; FuDG's role-partitioned pools
+  collapse when a fault lands on the scarce role — a dead lone prefill
+  instance starves the whole pool, and KV caches in flight to a dead
+  decoder are simply lost;
+* **capacity repair** — after each injected fault, the autoscaled
+  EcoServe cell's trajectory returns to ``n_live == n_target`` within a
+  provisioning delay (the PR 5 control loop observes ``n_live`` dropping
+  independently of its own decisions and commissions replacements).
+
+    PYTHONPATH=src python -m benchmarks.bench_fault_degradation
+    PYTHONPATH=src python -m benchmarks.bench_fault_degradation --smoke \
+        --stream rows.jsonl             # the CI cell: crash + preemption
+    PYTHONPATH=src python -m benchmarks.bench_fault_degradation \
+        --write-golden                  # re-pin the golden fixture
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+
+from benchmarks.common import emit
+from repro.simulator.runner import ExperimentRunner, fault_runner
+
+GOLDEN_PATH = (pathlib.Path(__file__).resolve().parent.parent
+               / "tests" / "golden" / "fault_scenarios.json")
+
+FAULT_LEVELS = ("none", "itrace:gentle")
+CONTROL_LEVELS = ("static", "band")
+
+
+def _cell_table(results: dict) -> None:
+    grid = ExperimentRunner.grid(results)
+    meta = results["meta"]
+    rate = meta["rates"][0]
+    scen = meta["scenarios"][0]
+    print("strategy,controller,faults,att_phase_min,attainment,completion,"
+          "lost,migrated,repairs")
+    for strat in meta["strategies"]:
+        for level in CONTROL_LEVELS:
+            for fv in FAULT_LEVELS:
+                m = grid[strat][scen][level][fv][rate]
+                stats = m.get("faults", {}).get("stats", {})
+                tl = m.get("timeline", {})
+                repairs = sum(1 for e in tl.get("events", [])
+                              if e["action"] == "repair")
+                print(f"{strat},{level},{fv},"
+                      f"{m['attainment_phase_min']:.4f},"
+                      f"{m['attainment']:.4f},{m['completion']:.4f},"
+                      f"{stats.get('lost', 0)},{stats.get('migrated', 0)},"
+                      f"{repairs}")
+
+
+def _assert_graceful_degradation(results: dict) -> dict:
+    """EcoServe's min-phase attainment under the interruption trace must
+    be strictly above every FuDG baseline's, under both the static pool
+    and the band controller."""
+    grid = ExperimentRunner.grid(results)
+    meta = results["meta"]
+    rate = meta["rates"][0]
+    scen = meta["scenarios"][0]
+    out = {}
+    for level in CONTROL_LEVELS:
+        eco = grid["ecoserve+migrate"][scen][level]["itrace:gentle"][rate]
+        out[level] = {"ecoserve": eco["attainment_phase_min"]}
+        for strat in meta["strategies"]:
+            if strat.startswith("ecoserve"):
+                continue
+            fudg = grid[strat][scen][level]["itrace:gentle"][rate]
+            out[level][strat] = fudg["attainment_phase_min"]
+            assert (eco["attainment_phase_min"]
+                    > fudg["attainment_phase_min"]), (
+                f"EcoServe must degrade more gracefully than {strat} "
+                f"under the interruption trace ({level} pool): "
+                f"{eco['attainment_phase_min']:.3f} vs "
+                f"{fudg['attainment_phase_min']:.3f}")
+    return out
+
+
+def _assert_capacity_repair(results: dict) -> None:
+    """The autoscaled EcoServe cell must record a repair commission after
+    each injected fault and its trajectory must return to
+    ``n_live == n_target``."""
+    cell = next(c for c in results["cells"]
+                if c["strategy"] == "ecoserve+migrate"
+                and c.get("autoscale") == "band" and c.get("faults"))
+    m = cell["metrics"]
+    tl = m["timeline"]
+    fault_times = [e["t"] for e in m["faults"]["log"]]
+    repairs = [e for e in tl["events"] if e["action"] == "repair"]
+    assert repairs, "no repair commissions despite injected faults"
+    for ft in fault_times:
+        later = [p for p in tl["trajectory"] if p["t"] > ft]
+        assert later and any(p["n"] == p["n_target"] for p in later), (
+            f"control loop never restored n_live == n_target after the "
+            f"fault at t={ft}")
+
+
+def run(stream: str = None):
+    runner = fault_runner()
+    runner.stream_path = stream
+    t0 = time.time()
+    results = runner.run()
+    dt = time.time() - t0
+    assert not results.get("errors"), results.get("errors")
+    print("\n== Fault degradation: crashes + spot preemption under "
+          "bursty load ==")
+    _cell_table(results)
+    margins = _assert_graceful_degradation(results)
+    _assert_capacity_repair(results)
+    print("\n  min-phase attainment under the interruption trace:")
+    for level, vals in margins.items():
+        ranked = ", ".join(f"{k}={v:.3f}" for k, v in vals.items())
+        print(f"    {level}: {ranked}")
+    print("  EcoServe strictly above every FuDG baseline; repair "
+          "commissions restored n_live == n_target after each fault")
+    emit("fault_degradation", dt * 1e6,
+         f"cells={len(results['cells'])}")
+    return {"results": results, "margins": margins}
+
+
+def run_smoke(stream: str = None) -> dict:
+    """The CI cell: one crash + one spot preemption (the gentle trace)
+    on the bursty shape with the band controller — proves the fault
+    layer, failure policy, and control-loop repair path end to end."""
+    runner = ExperimentRunner(
+        strategies=("ecoserve+migrate",), scenarios=("bursty",),
+        rates=(8.0,), autoscale=("band",), faults=("itrace:gentle",),
+        phases=4,
+        model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
+        workload="sharegpt", duration=48.0, warmup=6.0,
+        base_seed=42, n_workers=1, stream_path=stream)
+    results = runner.run()
+    assert not results.get("errors"), results.get("errors")
+    (cell,) = results["cells"]
+    m = cell["metrics"]
+    applied = m["faults"]["applied"]
+    repairs = sum(1 for e in m["timeline"]["events"]
+                  if e["action"] == "repair")
+    print(f"smoke: gentle trace under band controller attainment="
+          f"{m['attainment']:.3f} phase_min={m['attainment_phase_min']:.3f} "
+          f"applied={applied} repairs={repairs}")
+    assert applied.get("crash") == 1 and applied.get("preempt") == 1, (
+        f"gentle trace must land one crash + one preemption, got {applied}")
+    assert repairs >= 1, "no repair commission after instance loss"
+    assert m["finished"] > 0, "smoke cell ran empty"
+    return results
+
+
+def write_golden() -> None:
+    results = fault_runner().run()
+    assert not results.get("errors"), results.get("errors")
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    ExperimentRunner.save(results, GOLDEN_PATH)
+    print(f"wrote {len(results['cells'])} cells to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one crash + one preemption cell (CI)")
+    ap.add_argument("--stream", default=None, metavar="PATH",
+                    help="append one JSONL row per finished cell")
+    ap.add_argument("--write-golden", action="store_true",
+                    help="regenerate tests/golden/fault_scenarios.json")
+    args = ap.parse_args()
+    if args.write_golden:
+        write_golden()
+    elif args.smoke:
+        run_smoke(stream=args.stream)
+    else:
+        run(stream=args.stream)

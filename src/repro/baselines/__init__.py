@@ -55,6 +55,7 @@ class StrategySpec:
     queue: Optional[str] = None
     admission: Optional[str] = None
     routing: Optional[str] = None
+    failure: Optional[str] = None              # repro.faults FailurePolicy
     kwargs: Tuple[Tuple[str, Any], ...] = ()
     provenance: str = ""
 
@@ -76,7 +77,7 @@ class StrategySpec:
                                          make_queue_discipline,
                                          make_routing)
         cls = _families()[self.base]
-        return {
+        d = {
             "strategy": self.name,
             "base": self.base,
             "queue": make_queue_discipline(
@@ -88,6 +89,12 @@ class StrategySpec:
             "kwargs": self.ctor_kwargs,
             "provenance": self.provenance,
         }
+        if self.failure is not None:
+            # only when pinned, mirroring PolicySystemBase.describe():
+            # pre-fault-layer golden rows keep their exact bundles
+            from repro.faults import make_failure_policy
+            d["failure"] = make_failure_policy(self.failure).describe()
+        return d
 
     def build(self, cost, n_instances: int, slo=None, **overrides):
         """Construct the serving system.  ``overrides`` are caller
@@ -101,6 +108,8 @@ class StrategySpec:
             kw.setdefault("admission", self.admission)
         if self.routing is not None:
             kw.setdefault("routing", self.routing)
+        if self.failure is not None:
+            kw.setdefault("failure", self.failure)
         system = cls(cost, n_instances, slo, **kw)
         system.spec_name = self.name
         system.provenance = self.provenance
@@ -203,6 +212,11 @@ MODIFIERS: Dict[str, Callable[[StrategySpec], StrategySpec]] = {
     "spf": _with_queue("shortest-prompt"),
     "rr": _with("routing", "round-robin"),
     "slack": _with("admission", "kv-guard"),
+    # fault-tolerance slot (repro.faults): fate of in-flight requests
+    # when an instance crashes, is preempted, or retires
+    "retry": _with("failure", "resubmit:2"),
+    "migrate": _with("failure", "migrate"),
+    "drop": _with("failure", "drop"),
 }
 
 

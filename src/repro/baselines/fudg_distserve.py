@@ -31,14 +31,16 @@ class DistServeSystem(PolicySystemBase):
 
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
                  prefill_ratio: float = 0.5, n_nodes: int = None,
-                 queue_discipline=None, admission=None, routing=None):
+                 queue_discipline=None, admission=None, routing=None,
+                 failure=None):
         """``n_instances`` total; a ``prefill_ratio`` fraction become
         prefill instances, the rest decode instances, colocated per node."""
         self.prefill_ratio = prefill_ratio
         self._n_nodes = n_nodes
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
-                         admission=admission, routing=routing)
+                         admission=admission, routing=routing,
+                         failure=failure)
 
     def _build(self, n_instances: int) -> None:
         cost = self.cost
@@ -76,11 +78,21 @@ class DistServeSystem(PolicySystemBase):
                             engine: SimulationEngine) -> None:
         link = self.links[self._node_of[inst.iid]]
         for r in reqs:
-            target = min(self.decode_insts, key=lambda i: i.kv_tokens_used())
+            targets = [i for i in self.decode_insts if i.alive]
+            if not targets:
+                # every decode instance is dead: the FuDG cliff — the KV
+                # cache has nowhere to land, so the request is lost
+                self.fault_lost_requests([r], now, engine)
+                continue
+            target = min(targets, key=lambda i: i.kv_tokens_used())
             nbytes = self.cost.kv_transfer_bytes(r.prompt_len)
             done_t = link.transfer(nbytes, now)
 
             def deliver(r=r, target=target):
+                if not target.alive:
+                    # decode target died while the KV was in flight
+                    self.fault_lost_requests([r], engine.now, engine)
+                    return
                 r.state = RequestState.DECODING
                 if r.tokens_generated >= r.output_len:
                     r.state = RequestState.FINISHED

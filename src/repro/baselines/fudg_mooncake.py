@@ -30,11 +30,13 @@ class MoonCakeSystem(PolicySystemBase):
 
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
                  prefill_ratio: float = 0.5,
-                 queue_discipline=None, admission=None, routing=None):
+                 queue_discipline=None, admission=None, routing=None,
+                 failure=None):
         self.prefill_ratio = prefill_ratio
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
-                         admission=admission, routing=routing)
+                         admission=admission, routing=routing,
+                         failure=failure)
 
     def _build(self, n_instances: int) -> None:
         cost = self.cost
@@ -67,15 +69,28 @@ class MoonCakeSystem(PolicySystemBase):
                             engine: SimulationEngine) -> None:
         src_nic = self.nic[inst.iid]
         for r in reqs:
-            target = min(self.decode_insts, key=lambda i: i.kv_tokens_used())
+            targets = [i for i in self.decode_insts if i.alive]
+            if not targets:
+                # every decode instance is dead: the FuDG cliff — the KV
+                # cache has nowhere to land, so the request is lost
+                self.fault_lost_requests([r], now, engine)
+                continue
+            target = min(targets, key=lambda i: i.kv_tokens_used())
             nbytes = self.cost.kv_transfer_bytes(r.prompt_len)
             t_up = src_nic.transfer(nbytes, now)           # prefill -> pool
 
             def stage2(r=r, target=target, nbytes=nbytes):
+                if not target.alive:
+                    # decode target died while the KV sat in the pool
+                    self.fault_lost_requests([r], engine.now, engine)
+                    return
                 dst_nic = self.nic[target.iid]
                 t_down = dst_nic.transfer(nbytes, engine.now)  # pool -> decode
 
                 def deliver(r=r, target=target):
+                    if not target.alive:
+                        self.fault_lost_requests([r], engine.now, engine)
+                        return
                     r.state = RequestState.DECODING
                     if r.tokens_generated >= r.output_len:
                         r.state = RequestState.FINISHED

@@ -93,11 +93,13 @@ class SarathiSystem(PolicySystemBase):
 
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
                  chunk_tokens: int = 512,
-                 queue_discipline=None, admission=None, routing=None):
+                 queue_discipline=None, admission=None, routing=None,
+                 failure=None):
         self.chunk_tokens = chunk_tokens
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
-                         admission=admission, routing=routing)
+                         admission=admission, routing=routing,
+                         failure=failure)
 
     def _make_instance(self, iid: int) -> Instance:
         return SarathiInstance(iid, self.cost,

@@ -22,7 +22,9 @@ class VLLMSystem(PolicySystemBase):
     default_routing = "least-kv"
 
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
-                 queue_discipline=None, admission=None, routing=None):
+                 queue_discipline=None, admission=None, routing=None,
+                 failure=None):
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
-                         admission=admission, routing=routing)
+                         admission=admission, routing=routing,
+                         failure=failure)

@@ -34,7 +34,7 @@ from repro.control.signals import SignalCollector
 class ScalingEvent:
     t_decision: float
     t_effective: float
-    action: str                     # "up" | "down"
+    action: str                     # "up" | "down" | "repair"
     n_before: int                   # live instances at decision time
     n_target: int                   # committed count after the decision
     queue_depth: float
@@ -112,6 +112,8 @@ class Actuator:
         self.config = config
         self.timeline = timeline
         self._provisioning = 0      # committed, not yet live
+        self._cancelled = 0         # pending commissions revoked by "down"
+        self._intent: Optional[int] = None   # controller's last target
 
     @property
     def n_target(self) -> int:
@@ -135,7 +137,19 @@ class Actuator:
                 queue_depth=signals["queue_depth"],
                 attainment_window=signals["attainment_window"]))
             return True
-        gone = self.system.scale_down()
+        if self._provisioning > 0:
+            # a commission is still in flight: revoke it instead of
+            # shrinking the live pool — otherwise the provisioning
+            # instance joins anyway and the pool overshoots the target
+            self._provisioning -= 1
+            self._cancelled += 1
+            self.timeline.events.append(ScalingEvent(
+                t_decision=now, t_effective=now, action="down",
+                n_before=n_live, n_target=self.n_target,
+                queue_depth=signals["queue_depth"],
+                attainment_window=signals["attainment_window"]))
+            return True
+        gone = self.system.scale_down(now, self.engine)
         if gone is None:            # routing refused (e.g. last decoder)
             return False
         self.timeline.events.append(ScalingEvent(
@@ -145,9 +159,39 @@ class Actuator:
             attainment_window=signals["attainment_window"]))
         return True
 
+    def note_intent(self, n: int) -> None:
+        """Record the controller's committed pool size after a decision;
+        ``repair`` re-provisions toward it when faults destroy capacity."""
+        self._intent = n
+
+    def repair(self, now: float, signals: Dict[str, float]) -> int:
+        """Re-provision capacity lost to faults: when ``n_target`` has
+        dropped *below* the controller's last committed intent — which
+        only happens when instances died outside the control loop
+        (crash/preemption), never from its own decisions — commission
+        replacements.  Returns the number started."""
+        if self._intent is None:
+            return 0
+        started = 0
+        while self._intent - self.n_target > 0:
+            self._provisioning += 1
+            t_eff = now + self.config.provision_delay
+            self.engine.push_call(t_eff, self._commission)
+            self.timeline.events.append(ScalingEvent(
+                t_decision=now, t_effective=t_eff, action="repair",
+                n_before=len(self.system.instances),
+                n_target=self.n_target,
+                queue_depth=signals["queue_depth"],
+                attainment_window=signals["attainment_window"]))
+            started += 1
+        return started
+
     def _commission(self) -> None:
         """Provisioning finished: the instance joins the pool and the
         waiting queue is retried against the new capacity."""
+        if self._cancelled > 0:     # revoked by a later "down" decision
+            self._cancelled -= 1
+            return
         self._provisioning -= 1
         self.system.scale_up(self.engine)
         self.system._drain_queue(self.engine.now, self.engine)
@@ -200,11 +244,16 @@ class ControlLoopHarness:
         if now < self._next_tick:
             return
         signals = self.collector.snapshot(self.system, self.engine, now)
+        # replace capacity lost to faults first (n_target below the last
+        # committed intent) so the controller decides against the pool it
+        # actually asked for; a no-op in fault-free runs
+        self.actuator.repair(now, signals)
         decision = self.controller.decide(signals, self.actuator.n_target)
         if not self.actuator.apply(decision, now, signals):
             # contraction refused: the pool did not change, so the
             # controller must not sit out a cooldown for it
             self.controller.on_down_refused()
+        self.actuator.note_intent(self.actuator.n_target)
         self.timeline.record_tick(now, len(self.system.instances),
                                   self.actuator.n_target)
         self._next_tick = now + self.controller.config.interval

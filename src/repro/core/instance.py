@@ -76,6 +76,10 @@ class Instance:
 
     # FuDG prefill-only instances override this (see baselines)
     decode_here = True
+    # cleared by the fault layer (repro.faults) on crash / preemption
+    # deadline; the engine discards in-flight slots of dead instances and
+    # never activates them again
+    alive = True
 
     def __init__(self, iid: int, executor: ExecutorModel,
                  kv_capacity_tokens: int,
@@ -194,6 +198,21 @@ class Instance:
             self.remove_pending(r)
             r.first_token_time = t_end
             r.tokens_generated = 1
+
+    def set_executor(self, executor: ExecutorModel) -> None:
+        """Swap the executor in place (straggler-slowdown wrapper,
+        repro.faults), re-deriving the fast-path markers and invalidating
+        every duration cache.  The incremental aggregates are
+        executor-independent, so membership state carries over."""
+        self.executor = executor
+        new_clamp = int(getattr(executor, "ctx_clamp", 0) or 0)
+        if new_clamp != self._ctx_clamp:
+            # the clamped decode-context sum depends on the clamp value
+            self._ctx_clamp = new_clamp
+            self._decode_eff_sum = sum(
+                self._eff(r.kv_tokens()) for r in self.decoding)
+        self._fast_ctx_sum = hasattr(executor, "ctx_clamp")
+        self._touch()
 
     def kv_tokens_used(self) -> int:
         return self._decode_kv_sum + self._pending_tokens

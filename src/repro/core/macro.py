@@ -82,6 +82,16 @@ class MacroInstance:
             self._active_idx % len(self.instances))
         return inst
 
+    def remove_specific(self, inst: Instance) -> bool:
+        """Remove a named instance (fault teardown picks the victim, not
+        the emptiest-first heuristic); returns False if absent."""
+        if inst not in self.instances:
+            return False
+        self.instances.remove(inst)
+        self._active_idx = 0 if not self.instances else (
+            self._active_idx % len(self.instances))
+        return True
+
     @property
     def size(self) -> int:
         return len(self.instances)

@@ -37,6 +37,23 @@ def register_instance(inst: Instance) -> None:
     _ACTOR_REGISTRY[inst.iid] = inst
 
 
+def unregister_instance(inst: Instance) -> None:
+    """Inverse of ``register_instance``: contraction, merge cleanup, and
+    fault teardown must drop the actor-table entry, or the registry grows
+    without bound and stale handlers silently resolve dead instances."""
+    _ACTOR_REGISTRY.pop(inst.iid, None)
+
+
+def registry_size() -> int:
+    """Test/diagnostic hook: current actor-table population."""
+    return len(_ACTOR_REGISTRY)
+
+
+class StaleHandlerError(LookupError):
+    """An ``InstanceHandler`` pointed at an actor that is no longer
+    registered (retired by contraction or torn down by a fault)."""
+
+
 @dataclasses.dataclass
 class InstanceHandler:
     """Serializable proxy for an instance (paper §3.5.2)."""
@@ -45,7 +62,16 @@ class InstanceHandler:
     capabilities: Dict[str, Any]
 
     def resolve(self) -> Instance:
-        return _ACTOR_REGISTRY[self.actor_id]
+        inst = _ACTOR_REGISTRY.get(self.actor_id)
+        if inst is None:
+            raise StaleHandlerError(
+                f"actor {self.actor_id} is not registered (instance "
+                "retired or lost); the handler is stale")
+        if not getattr(inst, "alive", True):
+            raise StaleHandlerError(
+                f"actor {self.actor_id} resolved to a dead instance "
+                "(crashed or preempted); the handler is stale")
+        return inst
 
     def serialize(self) -> bytes:
         return pickle.dumps(self)
@@ -148,7 +174,24 @@ class OverallScheduler:
         if victim.size == 0:
             self.macros.remove(victim)
         self._maybe_merge()
+        if inst is not None:
+            # the retired instance drains outside the pool; its actor
+            # entry goes with it so stale handlers fail loudly
+            unregister_instance(inst)
         return inst
+
+    def discard_instance(self, inst: Instance) -> bool:
+        """Remove a *specific* instance (fault teardown: crash or spot
+        preemption picked the victim, not the contraction heuristic).
+        Returns False when the instance is not in any macro."""
+        for m in self.macros:
+            if m.remove_specific(inst):
+                if m.size == 0:
+                    self.macros.remove(m)
+                self._maybe_merge()
+                unregister_instance(inst)
+                return True
+        return False
 
     def _maybe_merge(self) -> None:
         if len(self.macros) < 2:

@@ -30,7 +30,8 @@ class EcoServeSystem(PolicySystemBase):
                  queue_timeout_factor: float = 4.0,
                  plus_plus: bool = False,
                  chunked_fallback: int = 0,
-                 queue_discipline=None, admission=None, routing=None):
+                 queue_discipline=None, admission=None, routing=None,
+                 failure=None):
         """``slo`` is a bare ``SLO`` or a multi-tenant ``SLOClassSet``;
         with a class set, admission/routing/slack all run against each
         request's own class budgets (single-class sets are bit-identical
@@ -52,7 +53,8 @@ class EcoServeSystem(PolicySystemBase):
             admission = TimeoutForcedAdmission(queue_timeout_factor)
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
-                         admission=admission, routing=routing)
+                         admission=admission, routing=routing,
+                         failure=failure)
 
     def _build(self, n_instances: int) -> None:
         self.sched = OverallScheduler(

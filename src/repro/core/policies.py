@@ -176,6 +176,12 @@ class RoutingPolicy:
             return None
         return min(system.instances, key=lambda i: i.kv_tokens_used())
 
+    def discard_instance(self, system, inst: "Instance") -> None:
+        """Stop routing to a *specific* instance (fault teardown: the
+        fault picked the victim, not the retirement heuristic).  The
+        base system has already dropped it from ``system.instances``;
+        policies with their own membership structures override this."""
+
     def describe(self) -> str:
         return self.name
 
@@ -238,6 +244,9 @@ class MacroLeastUtilizedRouting(RoutingPolicy):
     def remove_instance(self, system):
         return system.sched.remove_instance()
 
+    def discard_instance(self, system, inst):
+        system.sched.discard_instance(inst)
+
 
 class PrefillPartitionedRouting(RoutingPolicy):
     """FuDG: new requests go to the least-backlogged *prefill* instance;
@@ -261,6 +270,14 @@ class PrefillPartitionedRouting(RoutingPolicy):
         inst = min(system.decode_insts, key=lambda i: i.kv_tokens_used())
         system.decode_insts.remove(inst)
         return inst
+
+    def discard_instance(self, system, inst):
+        # a fault may take either kind — even the last decoder (that IS
+        # the FuDG cliff the degradation bench measures)
+        if inst in system.prefill_insts:
+            system.prefill_insts.remove(inst)
+        if inst in system.decode_insts:
+            system.decode_insts.remove(inst)
 
 
 # --------------------------------------------------------------------- #

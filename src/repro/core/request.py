@@ -11,6 +11,7 @@ class RequestState(enum.Enum):
     PENDING = "pending"        # admitted, waiting for a prefill slot
     DECODING = "decoding"      # prefill done, generating
     FINISHED = "finished"
+    FAILED = "failed"          # lost to a fault past the retry budget
 
 
 @dataclasses.dataclass
@@ -25,6 +26,10 @@ class Request:
     # DEFAULT_SLO_CLASS and behave exactly as before
     slo_class: str = "default"
     state: RequestState = RequestState.QUEUED
+    # times this request was resubmitted after losing its instance to a
+    # fault (repro.faults); arrival_time is never reset on resubmission,
+    # so TTFT keeps charging the full wait including lost work
+    retries: int = 0
 
     # --- runtime bookkeeping -------------------------------------------- #
     admitted_time: Optional[float] = None

@@ -35,6 +35,7 @@ from repro.core.policies import (AdmissionPolicy, QueueDiscipline,
                                  make_queue_discipline, make_routing)
 from repro.core.request import Request
 from repro.core.slo import SLO, SLOClassSet, as_slo_class_set
+from repro.faults.policies import FailurePolicy, make_failure_policy
 
 
 @runtime_checkable
@@ -58,9 +59,10 @@ class ServingSystem(Protocol):
         """Add one instance to the serving pool (mitosis expansion)."""
         ...
 
-    def scale_down(self) -> Optional[Instance]:
-        """Retire one instance (mitosis contraction); it drains its
-        in-flight work but receives no new requests."""
+    def scale_down(self, now: Optional[float] = None,
+                   engine=None) -> Optional[Instance]:
+        """Retire one instance (mitosis contraction); its in-flight work
+        is drained or resubmitted per the system's ``FailurePolicy``."""
         ...
 
     def describe(self) -> Dict[str, Any]:
@@ -79,12 +81,17 @@ class PolicySystemBase:
     default_queue = "fifo"
     default_admission = "immediate"
     default_routing = "least-kv"
+    default_failure = "drop"
 
     def __init__(self, cost, n_instances: int, slo=None, *,
-                 queue_discipline=None, admission=None, routing=None):
+                 queue_discipline=None, admission=None, routing=None,
+                 failure=None):
         """``slo`` is a bare ``SLO``, an ``SLOClassSet``, or None for the
         SLO-blind baselines; policies may be declarative strings
-        (``"timeout-forced:4"``) or policy instances."""
+        (``"timeout-forced:4"``) or policy instances.  ``failure``
+        (``"drop"`` / ``"resubmit:K"`` / ``"migrate:K"``,
+        ``repro.faults``) decides the fate of in-flight requests when an
+        instance crashes, is preempted, or retires under contraction."""
         self.cost = cost
         self.slo_set: Optional[SLOClassSet] = (
             as_slo_class_set(slo) if slo is not None else None)
@@ -97,6 +104,18 @@ class PolicySystemBase:
             admission if admission is not None else self.default_admission)
         self.routing: RoutingPolicy = make_routing(
             routing if routing is not None else self.default_routing)
+        self.failure: FailurePolicy = make_failure_policy(
+            failure if failure is not None else self.default_failure)
+        # describe() reports the failure slot only when a caller pinned
+        # it: pre-fault-layer golden rows must keep their exact bundles
+        self._failure_explicit = failure is not None
+        # iid -> evacuation deadline (inf for migrating planned
+        # removals); populated by the fault hooks, checked per slot end
+        self._evacuating: Dict[int, float] = {}
+        self.fault_stats: Dict[str, int] = {
+            "crashes": 0, "preemptions": 0, "slowdowns": 0,
+            "planned_removals": 0, "lost": 0, "dropped": 0,
+            "resubmitted": 0, "requeued": 0, "migrated": 0}
         self.queue: Deque[Request] = deque()
         self.instances: List[Instance] = []
         # set by StrategySpec.build; direct construction keeps family name
@@ -128,6 +147,11 @@ class PolicySystemBase:
         if kind == "prefill_handoff":
             self._on_prefill_handoff(inst, reqs, now, engine)
             return
+        if self._evacuating and inst.iid in self._evacuating:
+            # slot boundaries are the only legal moment to move in-flight
+            # work off an instance under a preemption notice / migrating
+            # planned removal (slots are uninterruptible)
+            self.failure.on_evacuation_slot(self, inst, now, engine)
         # retry queued admissions: instance states just changed
         self._drain_queue(now, engine)
 
@@ -173,17 +197,88 @@ class PolicySystemBase:
         self.routing.add_instance(self, inst)
         return inst
 
-    def scale_down(self) -> Optional[Instance]:
+    def scale_down(self, now: Optional[float] = None,
+                   engine=None) -> Optional[Instance]:
         inst = self.routing.remove_instance(self)
         if inst is not None and inst in self.instances:
             self.instances.remove(inst)
+        if inst is not None:
+            self.fault_stats["planned_removals"] += 1
+            self.failure.on_planned_removal(self, inst, now, engine)
         return inst
+
+    # ---------------- fault hooks (repro.faults) ------------------------- #
+    def detach_instance(self, inst: Instance) -> None:
+        """Remove a *specific* instance from the routable pool (fault
+        teardown picks the victim, unlike ``scale_down``'s heuristic)."""
+        if inst in self.instances:
+            self.instances.remove(inst)
+        self.routing.discard_instance(self, inst)
+
+    def fault_crash(self, inst: Instance, now: float,
+                    engine) -> List[Request]:
+        """Unannounced instance loss: the in-flight slot is discarded by
+        the engine, the KV cache is gone, and every request on the
+        instance flows through the failure policy.  Returns the lost
+        requests (post-policy: requeued, migrated, or FAILED)."""
+        inst.alive = False
+        self.detach_instance(inst)
+        self._evacuating.pop(inst.iid, None)
+        lost = list(inst.pending) + list(inst.decoding)
+        for r in list(inst.pending):
+            inst.remove_pending(r)
+        for r in list(inst.decoding):
+            inst.remove_decoding(r)
+        self.fault_stats["crashes"] += 1
+        self.fault_stats["lost"] += len(lost)
+        self.failure.on_instance_fault(self, inst, lost, now, engine)
+        if engine is not None:
+            self._drain_queue(now, engine)
+        return lost
+
+    def fault_preempt(self, inst: Instance, notice: float, now: float,
+                      engine) -> None:
+        """Spot preemption with a notice window: the instance stops
+        receiving new work immediately, keeps executing until
+        ``now + notice`` (the failure policy may evacuate work at slot
+        boundaries in between), then dies like a crash."""
+        self.detach_instance(inst)
+        deadline = now + notice
+        self._evacuating[inst.iid] = deadline
+        self.fault_stats["preemptions"] += 1
+        self.failure.on_notice(self, inst, deadline, now, engine)
+        engine.push_call(deadline, self._preempt_deadline, inst, engine)
+
+    def _preempt_deadline(self, inst: Instance, engine) -> None:
+        self._evacuating.pop(inst.iid, None)
+        if not inst.alive:
+            return
+        inst.alive = False
+        lost = list(inst.pending) + list(inst.decoding)
+        for r in list(inst.pending):
+            inst.remove_pending(r)
+        for r in list(inst.decoding):
+            inst.remove_decoding(r)
+        self.fault_stats["lost"] += len(lost)
+        if lost:
+            self.failure.on_instance_fault(self, inst, lost, engine.now,
+                                           engine)
+            self._drain_queue(engine.now, engine)
+
+    def fault_lost_requests(self, reqs: List[Request], now: float,
+                            engine) -> None:
+        """Requests lost with no owning instance (e.g. a FuDG KV transfer
+        whose decode target died mid-flight)."""
+        self.fault_stats["lost"] += len(reqs)
+        self.failure.on_instance_fault(self, None, reqs, now, engine)
+        if engine is not None:
+            self._drain_queue(now, engine)
 
     # ---------------- self-description ----------------------------------- #
     def describe(self) -> Dict[str, Any]:
         """The live policy composition (strings, ints — pickle/JSON safe;
         the worker boundary round-trips this through pickle)."""
-        return {
+        d = {
             "strategy": self.spec_name or self.base_name,
             "base": self.base_name,
             "queue": self.queue_discipline.describe(),
@@ -192,3 +287,8 @@ class PolicySystemBase:
             "n_instances": len(self.instances),
             "provenance": self.provenance,
         }
+        if self._failure_explicit:
+            # only when pinned: pre-fault-layer golden rows must keep
+            # their exact describe() bundles
+            d["failure"] = self.failure.describe()
+        return d

@@ -1,0 +1,113 @@
+"""Seeded, pure-sim-time fault schedules.
+
+A schedule is a list of ``FaultEvent``s fixed *before* the simulation
+starts, built from a declarative spec string and a cell seed — never
+from live simulation state — so a faulted cell is bit-reproducible
+across worker counts and scheduling orders, exactly like the arrival
+processes in ``repro.simulator.scenarios``.
+
+Spec grammar: ``;``-separated clauses, each ``<kind>:<k>=<v>,...``:
+
+* ``crash:t=14``            — one unannounced instance loss at t=14
+* ``crash:mtbf=30``         — Poisson crashes, mean time between 30 s
+* ``preempt:t=26,notice=2`` — spot preemption: 2 s notice, then loss
+* ``spot:mtbf=20,notice=2`` — recurring spot preemptions (Poisson)
+* ``slow:t=10,factor=3,dur=8`` — straggler: one instance runs 3x slower
+  for 8 s (``slow:mtbf=...`` draws recurring slowdowns)
+
+Victim choice is part of the schedule: every event carries a ``pick``
+uniform in [0, 1) drawn at build time; the injector maps it onto the
+live pool at fire time (``live[int(pick * len(live))]``).  The RNG is
+seeded from CRC32(spec) XOR a Knuth-mixed cell seed — the same recipe
+as ``repro.simulator.runner.cell_seed`` — so two cells differing only
+in the fault spec draw different schedules while sharing arrivals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from typing import List, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("crash", "preempt", "slow")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    t: float                 # sim-time the fault fires
+    kind: str                # "crash" | "preempt" | "slow"
+    pick: float              # uniform [0,1) victim selector
+    notice: float = 0.0      # preempt: seconds of warning before loss
+    factor: float = 1.0      # slow: executor-time multiplier
+    duration: float = 0.0    # slow: seconds the slowdown lasts
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSchedule:
+    spec: str
+    seed: int
+    events: Tuple[FaultEvent, ...]
+
+    def __len__(self) -> int:
+        return len(self.events)
+
+
+def _schedule_seed(spec: str, seed: int) -> int:
+    return (zlib.crc32(spec.encode()) ^ (seed * 2654435761)) & 0x7FFFFFFF
+
+
+def _parse_clause(clause: str) -> Tuple[str, dict]:
+    kind, _, argstr = clause.partition(":")
+    kind = kind.strip()
+    if kind == "spot":               # alias: recurring preemption
+        kind = "preempt"
+    if kind not in FAULT_KINDS:
+        raise KeyError(f"unknown fault kind {kind!r}; expected one of "
+                       f"{FAULT_KINDS} (or 'spot')")
+    args = {}
+    for part in filter(None, (p.strip() for p in argstr.split(","))):
+        k, _, v = part.partition("=")
+        if not v:
+            raise ValueError(f"malformed fault option {part!r} in "
+                             f"{clause!r} (expected k=v)")
+        args[k.strip()] = float(v)
+    if ("t" in args) == ("mtbf" in args):
+        raise ValueError(f"fault clause {clause!r} needs exactly one of "
+                         "t= (one-shot) or mtbf= (recurring)")
+    known = {"t", "mtbf", "notice", "factor", "dur"}
+    unknown = set(args) - known
+    if unknown:
+        raise ValueError(f"unknown fault options {sorted(unknown)} in "
+                         f"{clause!r}; expected {sorted(known)}")
+    return kind, args
+
+
+def make_fault_schedule(spec: str, seed: int,
+                        duration: float) -> FaultSchedule:
+    """Materialize a spec into a deterministic event list over
+    [0, duration).  Clauses draw from one shared RNG stream in clause
+    order, so the whole schedule is a pure function of (spec, seed,
+    duration)."""
+    rng = np.random.default_rng(_schedule_seed(spec, seed))
+    events: List[FaultEvent] = []
+    for clause in filter(None, (c.strip() for c in spec.split(";"))):
+        kind, args = _parse_clause(clause)
+        notice = args.get("notice", 0.0)
+        factor = args.get("factor", 2.0)
+        dur = args.get("dur", 5.0)
+        if "t" in args:
+            times = [args["t"]]
+        else:
+            times, t = [], 0.0
+            while True:
+                t += float(rng.exponential(args["mtbf"]))
+                if t >= duration:
+                    break
+                times.append(t)
+        for t in times:
+            events.append(FaultEvent(
+                t=float(t), kind=kind, pick=float(rng.random()),
+                notice=notice, factor=factor, duration=dur))
+    events.sort(key=lambda e: (e.t, e.kind, e.pick))
+    return FaultSchedule(spec=spec, seed=seed, events=tuple(events))

@@ -75,6 +75,8 @@ class SimulationEngine:
 
     def activate(self, inst: Instance) -> None:
         """Ensure the instance is executing a slot (idempotent)."""
+        if not inst.alive:
+            return
         if self._executing.get(inst.iid):
             return
         kind, dur, reqs = inst.next_slot(self.now)
@@ -87,6 +89,13 @@ class SimulationEngine:
     def _complete_slot(self, inst: Instance, kind: str,
                        reqs: List[Request], t_end: float) -> None:
         self._executing[inst.iid] = False
+        if not inst.alive:
+            # the instance died mid-slot (repro.faults): the slot's work
+            # is lost with its KV — the fault path already re-routed the
+            # affected requests, so applying completion here would corrupt
+            # their (possibly re-running) state and the dead instance's
+            # aggregates
+            return
         if kind == "prefill" and not inst.decode_here:
             # FuDG prefill instance: mark first token, hand off
             inst.handoff_prefilled(reqs, t_end)

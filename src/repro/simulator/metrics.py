@@ -52,7 +52,7 @@ def phase_edges(duration: float, warmup: float, phases: int):
 def run_once(system_factory: Callable[[], object], workload,
              rate: float, slo, duration: float = 240.0,
              warmup: float = None, seed: int = 0,
-             control=None, phases=None) -> Dict[str, float]:
+             control=None, phases=None, faults=None) -> Dict[str, float]:
     """One simulation at a fixed rate.  ``slo`` is a bare ``SLO`` or an
     ``SLOClassSet``; a heterogeneous set adds ``attainment_by_class``
     (per-class grid) and ``attainment_min`` (worst class) to the row.
@@ -66,7 +66,15 @@ def run_once(system_factory: Callable[[], object], workload,
     explicit boundary sequence — adding ``attainment_by_phase`` (each
     phase scored over requests *arriving* in it, unfinished ones
     counting as misses, so post-shift dips are visible) and the
-    min-over-phases scalar ``attainment_phase_min``."""
+    min-over-phases scalar ``attainment_phase_min``.
+
+    ``faults`` injects a seeded fault schedule (``repro.faults``): a spec
+    string (``"crash:t=14;spot:mtbf=20,notice=2"``), a named interruption
+    trace (``"itrace:gentle"``, ``repro.simulator.scenarios``), or a
+    prebuilt ``FaultSchedule``; the row then carries the injector's
+    ``faults`` summary (applied events + failure-policy stats).  Faulted
+    requests that never finish count as misses exactly like any other
+    unfinished request."""
     system = system_factory()
     warmup = duration * 0.15 if warmup is None else min(warmup,
                                                         duration * 0.5)
@@ -88,6 +96,20 @@ def run_once(system_factory: Callable[[], object], workload,
         from repro.control import ControlLoopHarness, make_controller
         harness = ControlLoopHarness(
             system, engine, make_controller(control)).attach()
+    injector = None
+    if faults:
+        # lazy for the same reason: fault-free cells stay import-free
+        from repro.faults import FaultInjector, make_fault_schedule
+        if hasattr(faults, "events"):          # prebuilt FaultSchedule
+            schedule = faults
+        else:
+            spec_str = str(faults)
+            if spec_str.startswith("itrace:"):
+                from repro.simulator.scenarios import INTERRUPTION_TRACES
+                spec_str = INTERRUPTION_TRACES[spec_str[len("itrace:"):]]
+            schedule = make_fault_schedule(spec_str, seed=seed,
+                                           duration=duration)
+        injector = FaultInjector(schedule, system).attach(engine)
     # allow in-flight work to drain past the arrival window
     engine.run(reqs, horizon=duration * 2.5)
     scored = [r for r in engine.finished if r.arrival_time >= warmup]
@@ -132,6 +154,8 @@ def run_once(system_factory: Callable[[], object], workload,
         out["attainment_phase_min"] = min(by_phase) if by_phase else 1.0
     if harness is not None:
         out["timeline"] = harness.timeline.summary()
+    if injector is not None:
+        out["faults"] = injector.summary()
     out.update(percentile_latencies(scored))
     return out
 

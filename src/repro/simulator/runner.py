@@ -86,7 +86,7 @@ HARDWARE = {"L20": GPU_L20, "A800": GPU_A800, "tpu-v5e": TPU_V5E_SIM}
 # single-class golden grids keep their legacy rows)
 SUMMARY_KEYS = ("attainment", "attainment_min", "attainment_by_class",
                 "attainment_by_phase", "attainment_phase_min", "timeline",
-                "completion", "finished",
+                "faults", "completion", "finished",
                 "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
 GOODPUT_SUMMARY_KEYS = ("goodput", "target", "probes", "attainment",
                         "attainment_min", "attainment_by_class",
@@ -172,6 +172,8 @@ def _run_cell(spec: Dict) -> Dict:
         run_kw["control"] = spec["autoscale"]
     if spec.get("phases"):
         run_kw["phases"] = spec["phases"]
+    if spec.get("faults"):           # None = fault-free cell
+        run_kw["faults"] = spec["faults"]
     metrics = run_once(factory, scenario, spec["rate"], slo,
                        duration=spec["duration"], warmup=spec["warmup"],
                        seed=spec["seed"], **run_kw)
@@ -231,6 +233,15 @@ class ExperimentRunner:
     # static baseline replay the IDENTICAL arrival sequence, so their
     # attainment difference is the controller's doing alone.
     autoscale: Union[None, str, Sequence[Optional[str]]] = None
+    # fault-injection axis (repro.faults): None = every cell fault-free
+    # (legacy); a fault-spec string ("crash:t=14", "spot:mtbf=20,notice=2"),
+    # a named interruption trace ("itrace:gentle"), or a sequence of them
+    # — None entries mean "fault-free baseline" — makes the fault schedule
+    # a grid level.  Seed-neutral like ``autoscale``: a faulted cell and
+    # its clean baseline replay the IDENTICAL arrival sequence, so the
+    # attainment delta isolates the faults (the schedule itself derives
+    # its own RNG stream from (spec, cell seed)).
+    faults: Union[None, str, Sequence[Optional[str]]] = None
     # split the scored window into this many equal attainment phases
     # (rows gain attainment_by_phase / attainment_phase_min)
     phases: Optional[int] = None
@@ -264,6 +275,12 @@ class ExperimentRunner:
                              "goodput search's rate knob and the "
                              "controller's capacity knob would chase "
                              "each other")
+        if self.faults is not None and self.mode == "goodput":
+            raise ValueError("fault cells are fixed-rate only: the "
+                             "schedule is laid out over the cell's fixed "
+                             "duration, and a fault mid-bisection would "
+                             "make the frontier measure luck, not "
+                             "capacity")
 
     # ---- grid axes ---------------------------------------------------- #
     def _instance_counts(self) -> Tuple[int, ...]:
@@ -283,6 +300,13 @@ class ExperimentRunner:
         if isinstance(self.autoscale, str):
             return (self.autoscale,)
         return tuple(self.autoscale)
+
+    def _faults_axis(self) -> Tuple[Optional[str], ...]:
+        if self.faults is None:
+            return (None,)
+        if isinstance(self.faults, str):
+            return (self.faults,)
+        return tuple(self.faults)
 
     def _norm_tenants(self) -> Optional[List]:
         """JSON-able tenant entries for cell specs: names stay strings
@@ -366,21 +390,27 @@ class ExperimentRunner:
                     for n in self._instance_counts():
                         for t, p in self._tp_pairs():
                             for ctrl in self._autoscale_axis():
-                                cell = {**common, "strategy": strat,
-                                        "scenario": scen, "rate": rate,
-                                        "n_instances": n,
-                                        "tp": t, "pp": p,
-                                        "seed": cell_seed(
-                                            self.base_seed, strat, scen,
-                                            rate,
-                                            extra=self._seed_extra(
-                                                n, (t, p)))}
-                                if self.autoscale is not None:
-                                    # same seed across controller values:
-                                    # static vs autoscaled cells replay
-                                    # identical arrivals by design
-                                    cell["autoscale"] = ctrl
-                                out.append(cell)
+                                for fv in self._faults_axis():
+                                    cell = {**common, "strategy": strat,
+                                            "scenario": scen, "rate": rate,
+                                            "n_instances": n,
+                                            "tp": t, "pp": p,
+                                            "seed": cell_seed(
+                                                self.base_seed, strat, scen,
+                                                rate,
+                                                extra=self._seed_extra(
+                                                    n, (t, p)))}
+                                    if self.autoscale is not None:
+                                        # same seed across controller
+                                        # values: static vs autoscaled
+                                        # cells replay identical arrivals
+                                        # by design
+                                        cell["autoscale"] = ctrl
+                                    if self.faults is not None:
+                                        # ditto: faulted vs clean cells
+                                        # share arrivals by design
+                                        cell["faults"] = fv
+                                    out.append(cell)
         return out
 
     def run(self) -> Dict:
@@ -427,6 +457,10 @@ class ExperimentRunner:
             meta.pop("autoscale")
         else:
             meta["autoscale"] = list(self._autoscale_axis())
+        if self.faults is None:         # and for the fault axis
+            meta.pop("faults")
+        else:
+            meta["faults"] = list(self._faults_axis())
         if self.phases is None:
             meta.pop("phases")
         if not isinstance(self.n_instances, int):
@@ -459,13 +493,15 @@ class ExperimentRunner:
         (fixed mode) or [strategy][scenario] (goodput mode).  Swept axes
         insert their own levels after [scenario] so cells can't overwrite
         each other: a ``tp`` sweep keys ``"tp{T}pp{P}"``, an
-        ``n_instances`` sweep keys the count, and an ``autoscale`` sweep
-        keys the controller spec (``"static"`` for None), in that
+        ``n_instances`` sweep keys the count, an ``autoscale`` sweep keys
+        the controller spec (``"static"`` for None), and a ``faults``
+        sweep keys the fault spec (``"none"`` for None), in that
         order."""
         cells = results["cells"]
         multi_n = len({c.get("n_instances") for c in cells}) > 1
         multi_tp = len({(c.get("tp"), c.get("pp")) for c in cells}) > 1
         multi_as = len({c.get("autoscale") for c in cells}) > 1
+        multi_f = len({c.get("faults") for c in cells}) > 1
         out: Dict[str, Dict[str, Dict]] = {}
         for cell in cells:
             leaf = cell.get("metrics", cell)
@@ -476,6 +512,8 @@ class ExperimentRunner:
                 keys.append(cell["n_instances"])
             if multi_as:
                 keys.append(cell.get("autoscale") or "static")
+            if multi_f:
+                keys.append(cell.get("faults") or "none")
             if cell.get("mode") != "goodput":
                 keys.append(cell["rate"])
             node = out.setdefault(cell["strategy"], {})
@@ -577,6 +615,36 @@ def dynamic_scaling_runner(n_workers: Optional[int] = None
         phases=6,
         model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
         workload="sharegpt", duration=72.0, warmup=6.0,
+        base_seed=42, n_workers=n_workers)
+
+
+def fault_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
+    """The canonical fault-degradation grid: EcoServe vs both FuDG
+    baselines under the "gentle" interruption trace (one crash at t=14,
+    one spot preemption with a 2 s notice at t=26) next to their
+    fault-free baselines, every system running the same migrate failure
+    policy, with and without the closed-loop band controller; pinned by
+    tests/golden/fault_scenarios.json.
+
+    The claim the golden pins: temporal disaggregation degrades
+    gracefully under instance loss — any EcoServe survivor still serves
+    both phases, so preemption notices migrate decodes to peers and the
+    control loop's repair path re-provisions the lost capacity — whereas
+    FuDG's role-partitioned pools collapse when a fault lands on the
+    scarce role (a dead lone prefill instance starves the whole pool,
+    and KV caches in flight to a dead decoder are simply lost).
+    Seed-neutrality of the faults axis means each strategy's faulted and
+    clean cells replay the identical arrival sequence."""
+    return ExperimentRunner(
+        strategies=("ecoserve+migrate", "distserve+migrate",
+                    "mooncake+migrate"),
+        scenarios=("bursty",),
+        rates=(8.0,),
+        autoscale=(None, "band"),
+        faults=(None, "itrace:gentle"),
+        phases=6,
+        model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
+        workload="sharegpt", duration=48.0, warmup=6.0,
         base_seed=42, n_workers=n_workers)
 
 

@@ -436,6 +436,19 @@ class RoundTripReplay:
 
 SCENARIO_KINDS = ("poisson", "bursty", "diurnal", "ramp", "replay")
 
+# Named interruption traces: fault-spec strings (``repro.faults``
+# grammar) reachable as ``faults="itrace:<name>"`` in ``run_once`` and
+# grid cells, so benchmarks pin a fault shape by name the way scenarios
+# pin an arrival shape.  "gentle" is one crash plus one spot preemption
+# at fixed times (the CI smoke shape); "stormy" layers stochastic spot
+# churn, crashes, and a straggler on top — the spec's mtbf clauses draw
+# their event times from the schedule's own seeded RNG, so every cell
+# seed gets a distinct but reproducible storm.
+INTERRUPTION_TRACES = {
+    "gentle": "crash:t=14;preempt:t=26,notice=2",
+    "stormy": "spot:mtbf=16,notice=2;crash:mtbf=30;slow:t=10,factor=2,dur=8",
+}
+
 
 def make_scenario(kind: str, profile: Union[str, WorkloadProfile],
                   rate: float, seed: int = 0, **kw):

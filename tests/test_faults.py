@@ -1,0 +1,431 @@
+"""The fault layer (``repro.faults``): seeded schedules, failure
+policies, engine-loop injection, and the actuator's commission-cancel /
+repair paths.
+
+Property layer (hypothesis with seeded fallbacks, matching the repo's
+derandomized CI profile):
+
+* a fault schedule is a pure function of (spec, seed, duration);
+* the retry budget is never exceeded and resubmitted requests keep
+  their ORIGINAL arrival time (TTFT charges the full wait);
+* notice-window migration moves decodes with token counts intact.
+
+End-to-end layer: crashes, preemptions, and stragglers injected through
+the live engine against EcoServe and the FuDG baselines, including the
+all-decoders-dead FuDG cliff and the engine discarding the in-flight
+slot of a crashed instance.
+"""
+import random
+from collections import deque
+
+import pytest
+
+from repro.baselines import make_system
+from repro.configs import get_config
+from repro.core.request import Request, RequestState
+from repro.core.slo import DATASET_SLOS
+from repro.faults import (FaultInjector, MigrateFailure, ResubmitFailure,
+                          SlowExecutor, make_failure_policy,
+                          make_fault_schedule)
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.simulator.engine import SimulationEngine
+from repro.simulator.scenarios import make_scenario
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+
+def _cost():
+    return InstanceCostModel(cfg=get_config("llama-30b"), hw=GPU_L20, tp=4)
+
+
+SLO = DATASET_SLOS["sharegpt"]
+
+
+# --------------------------------------------------------------------- #
+# schedules: pure functions of (spec, seed, duration)
+# --------------------------------------------------------------------- #
+def _assert_schedule_wellformed(sched, duration):
+    times = [e.t for e in sched.events]
+    assert times == sorted(times)
+    assert all(0.0 <= e.pick < 1.0 for e in sched.events)
+    for e in sched.events:
+        assert e.kind in ("crash", "preempt", "slow")
+
+
+def test_schedule_deterministic_under_seed():
+    spec = "crash:mtbf=12;spot:mtbf=9,notice=2;slow:t=4,factor=3,dur=6"
+    a = make_fault_schedule(spec, seed=77, duration=60.0)
+    b = make_fault_schedule(spec, seed=77, duration=60.0)
+    assert a == b and len(a) > 0
+    _assert_schedule_wellformed(a, 60.0)
+    # a different seed moves the recurring draws (same one-shots)
+    c = make_fault_schedule(spec, seed=78, duration=60.0)
+    mtbf_a = [e.t for e in a.events if e.t != 4.0]
+    mtbf_c = [e.t for e in c.events if e.t != 4.0]
+    assert mtbf_a != mtbf_c
+    # and a different spec re-seeds even at the same cell seed
+    d = make_fault_schedule(spec + ";crash:t=50", seed=77, duration=60.0)
+    assert [e.t for e in d.events] != [e.t for e in a.events]
+
+
+def test_spot_alias_and_clause_defaults():
+    s = make_fault_schedule("spot:mtbf=5,notice=2", seed=1, duration=40.0)
+    assert s.events and all(e.kind == "preempt" for e in s.events)
+    assert all(e.notice == 2.0 for e in s.events)
+    assert all(e.t < 40.0 for e in s.events)
+    one = make_fault_schedule("slow:t=3", seed=1, duration=40.0)
+    (ev,) = one.events
+    assert (ev.factor, ev.duration) == (2.0, 5.0)   # documented defaults
+
+
+def test_schedule_parse_errors():
+    with pytest.raises(KeyError, match="unknown fault kind"):
+        make_fault_schedule("meteor:t=3", seed=0, duration=10.0)
+    with pytest.raises(ValueError, match="exactly one of"):
+        make_fault_schedule("crash:t=3,mtbf=5", seed=0, duration=10.0)
+    with pytest.raises(ValueError, match="exactly one of"):
+        make_fault_schedule("crash:notice=2", seed=0, duration=10.0)
+    with pytest.raises(ValueError, match="unknown fault options"):
+        make_fault_schedule("crash:t=3,warp=9", seed=0, duration=10.0)
+    with pytest.raises(ValueError, match="malformed"):
+        make_fault_schedule("crash:t", seed=0, duration=10.0)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           mtbf=st.floats(min_value=1.0, max_value=50.0),
+           duration=st.floats(min_value=5.0, max_value=120.0))
+    def test_schedule_purity_property(seed, mtbf, duration):
+        spec = f"crash:mtbf={mtbf:g};spot:mtbf={mtbf:g},notice=1"
+        a = make_fault_schedule(spec, seed=seed, duration=duration)
+        assert a == make_fault_schedule(spec, seed=seed, duration=duration)
+        _assert_schedule_wellformed(a, duration)
+        assert all(e.t < duration for e in a.events)
+
+
+def test_schedule_purity_seeded():
+    rng = random.Random(9)
+    for _ in range(30):
+        seed = rng.randrange(2**31)
+        mtbf = rng.uniform(1.0, 50.0)
+        duration = rng.uniform(5.0, 120.0)
+        spec = f"crash:mtbf={mtbf:g};spot:mtbf={mtbf:g},notice=1"
+        a = make_fault_schedule(spec, seed=seed, duration=duration)
+        assert a == make_fault_schedule(spec, seed=seed, duration=duration)
+        _assert_schedule_wellformed(a, duration)
+        assert all(e.t < duration for e in a.events)
+
+
+# --------------------------------------------------------------------- #
+# failure policies: construction, retry budget, arrival-time contract
+# --------------------------------------------------------------------- #
+def test_make_failure_policy_specs_and_errors():
+    assert make_failure_policy("drop").describe() == "drop"
+    assert make_failure_policy("resubmit").describe() == "resubmit:2"
+    assert make_failure_policy("resubmit:0").budget == 0
+    assert make_failure_policy("migrate:3").describe() == "migrate:3"
+    p = make_failure_policy("migrate")
+    assert make_failure_policy(p) is p
+    with pytest.raises(KeyError, match="unknown failure policy"):
+        make_failure_policy("teleport")
+    with pytest.raises(TypeError):
+        make_failure_policy(42)
+
+
+class _StatsSys:
+    """Minimal surface ResubmitFailure needs: a queue and the stats."""
+
+    def __init__(self):
+        self.queue = deque()
+        self.fault_stats = {"dropped": 0, "resubmitted": 0, "requeued": 0}
+
+
+def _hit_until_dead(budget, hits):
+    pol = ResubmitFailure(budget)
+    sys_ = _StatsSys()
+    req = Request(rid=1, arrival_time=1.5, prompt_len=16, output_len=4)
+    req.tokens_generated = 2
+    for _ in range(hits):
+        if req.state == RequestState.FAILED:
+            break
+        sys_.queue.clear()           # the next fault takes it off-queue
+        pol.on_instance_fault(sys_, None, [req], 0.0, None)
+    return pol, sys_, req
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=60, deadline=None)
+    @given(budget=st.integers(0, 3), hits=st.integers(1, 6))
+    def test_retry_budget_never_exceeded_property(budget, hits):
+        _, sys_, req = _hit_until_dead(budget, hits)
+        assert req.retries == min(hits, budget)
+        assert req.arrival_time == 1.5          # never reset
+        if hits > budget:
+            assert req.state == RequestState.FAILED
+            assert sys_.fault_stats["dropped"] == 1
+        else:
+            assert req.state == RequestState.QUEUED
+            assert req.tokens_generated == 0    # lost work re-earned
+            assert req in sys_.queue
+
+
+def test_retry_budget_never_exceeded_seeded():
+    rng = random.Random(5)
+    for _ in range(40):
+        budget, hits = rng.randint(0, 3), rng.randint(1, 6)
+        _, sys_, req = _hit_until_dead(budget, hits)
+        assert req.retries == min(hits, budget)
+        assert req.arrival_time == 1.5
+        assert (req.state == RequestState.FAILED) == (hits > budget)
+
+
+def test_migration_preserves_token_counts_and_first_token_time():
+    """Notice-window migration moves a decode through the serialized
+    ``InstanceHandler`` path: token counts and TTFT history intact, no
+    re-prefill."""
+    system = make_system("ecoserve", _cost(), 2, SLO, failure="migrate")
+    a, b = system.instances
+    r = Request(rid=7, arrival_time=0.0, prompt_len=64, output_len=10)
+    r.state = RequestState.DECODING
+    r.tokens_generated = 3
+    r.first_token_time = 0.5
+    r.instance_id = a.iid
+    a.add_decoding(r)
+    system.detach_instance(a)
+    system._evacuating[a.iid] = 5.0
+    system.failure.on_evacuation_slot(system, a, 1.0, None)
+    assert r in b.decoding and r not in a.decoding
+    assert r.instance_id == b.iid
+    assert r.tokens_generated == 3              # no work lost
+    assert r.first_token_time == 0.5            # TTFT history intact
+    assert system.fault_stats["migrated"] == 1
+    assert a.iid not in system._evacuating      # fully evacuated
+
+
+def test_migration_with_no_live_target_falls_back_to_resubmit():
+    system = make_system("ecoserve", _cost(), 2, SLO, failure="migrate")
+    a, b = system.instances
+    r = Request(rid=8, arrival_time=0.0, prompt_len=64, output_len=10)
+    r.state = RequestState.DECODING
+    r.tokens_generated = 3
+    a.add_decoding(r)
+    b.alive = False                              # nowhere to go
+    system.detach_instance(a)
+    system._evacuating[a.iid] = 5.0
+    system.failure.on_evacuation_slot(system, a, 1.0, None)
+    assert r.state == RequestState.QUEUED and r.retries == 1
+    assert r.tokens_generated == 0               # KV will be lost anyway
+
+
+# --------------------------------------------------------------------- #
+# end-to-end injection through the live engine
+# --------------------------------------------------------------------- #
+def _finished_are_complete(reqs):
+    for r in reqs:
+        if r.state == RequestState.FINISHED:
+            assert r.tokens_generated == r.output_len, r.rid
+
+
+def test_crash_resubmit_end_to_end():
+    system = make_system("vllm", _cost(), 3, SLO, failure="resubmit:1")
+    scen = make_scenario("poisson", "sharegpt", 6.0, seed=7)
+    reqs = scen.generate(24.0)
+    arrival = {r.rid: r.arrival_time for r in reqs}
+    engine = SimulationEngine(system)
+    sched = make_fault_schedule("crash:mtbf=9", seed=3, duration=24.0)
+    inj = FaultInjector(sched, system).attach(engine)
+    engine.run(reqs, horizon=60.0)
+    assert system.fault_stats["crashes"] >= 1
+    assert system.fault_stats["resubmitted"] >= 1
+    assert all(r.retries <= 1 for r in reqs)
+    assert all(arrival[r.rid] == r.arrival_time for r in reqs)
+    failed = [r for r in reqs if r.state == RequestState.FAILED]
+    assert len(failed) == system.fault_stats["dropped"]
+    _finished_are_complete(reqs)
+    # the injector's log matches the stats it reports
+    s = inj.summary()
+    assert s["applied"].get("crash", 0) == system.fault_stats["crashes"]
+    assert s["stats"] == system.fault_stats
+
+
+def test_preempt_notice_migrates_end_to_end():
+    system = make_system("ecoserve", _cost(), 4, SLO, failure="migrate")
+    scen = make_scenario("poisson", "sharegpt", 6.0, seed=11)
+    reqs = scen.generate(24.0)
+    engine = SimulationEngine(system)
+    sched = make_fault_schedule("preempt:t=8,notice=2", seed=3,
+                                duration=24.0)
+    FaultInjector(sched, system).attach(engine)
+    engine.run(reqs, horizon=60.0)
+    assert system.fault_stats["preemptions"] == 1
+    assert len(system.instances) == 3
+    _finished_are_complete(reqs)
+    # work was on the victim at notice time: it moved or requeued, and
+    # nothing the policy handled was silently lost
+    moved = (system.fault_stats["migrated"]
+             + system.fault_stats["requeued"]
+             + system.fault_stats["resubmitted"])
+    assert moved >= 1
+    # nothing is stranded on the preempted instance: whatever is still
+    # running at horizon sits on a live survivor
+    live_ids = {i.iid for i in system.instances}
+    for r in reqs:
+        if r.state == RequestState.DECODING:
+            assert r.instance_id in live_ids
+
+
+def test_engine_discards_in_flight_slot_of_crashed_instance():
+    """The invariant behind hard kills: a busy instance always has an
+    in-flight completion event; crashing it mid-slot must discard that
+    completion (its requests were already re-routed) instead of applying
+    it to a corpse."""
+    system = make_system("vllm", _cost(), 2, SLO, failure="resubmit:2")
+    r = Request(rid=1, arrival_time=0.0, prompt_len=256, output_len=4)
+    engine = SimulationEngine(system)
+
+    def kill():
+        inst = next(i for i in system.instances if i.busy)
+        system.fault_crash(inst, engine.now, engine)
+
+    engine.push_call(0.01, kill)     # lands inside the first prefill slot
+    engine.run([r], horizon=30.0)
+    assert system.fault_stats["crashes"] == 1
+    assert r.state == RequestState.FINISHED and r.retries == 1
+    assert r.tokens_generated == r.output_len
+    assert len(system.instances) == 1
+    assert all(i.alive for i in system.instances)
+
+
+def test_fudg_cliff_all_decoders_dead_loses_requests():
+    """DistServe with its lone decode instance crashed: prefilled KV has
+    nowhere to land, so the hand-off hook must route requests through
+    ``fault_lost_requests`` (here: drop) instead of crashing on an empty
+    ``min()``."""
+    system = make_system("distserve", _cost(), 2, SLO, failure="drop",
+                         prefill_ratio=0.5)
+    assert len(system.decode_insts) == 1
+    scen = make_scenario("poisson", "sharegpt", 4.0, seed=5)
+    reqs = scen.generate(10.0)
+    engine = SimulationEngine(system)
+    engine.push_call(1.0, lambda: system.fault_crash(
+        system.decode_insts[0], engine.now, engine))
+    engine.run(reqs, horizon=40.0)
+    assert system.fault_stats["crashes"] == 1
+    assert not system.decode_insts          # routing dropped the corpse
+    assert system.fault_stats["dropped"] >= 1
+    failed = [r for r in reqs if r.state == RequestState.FAILED]
+    assert len(failed) == system.fault_stats["dropped"]
+    _finished_are_complete(reqs)
+
+
+def test_slowdown_wraps_then_restores_executor():
+    system = make_system("ecoserve", _cost(), 2, SLO)
+    scen = make_scenario("poisson", "sharegpt", 4.0, seed=2)
+    reqs = scen.generate(12.0)
+    engine = SimulationEngine(system)
+    sched = make_fault_schedule("slow:t=2,factor=4,dur=3", seed=1,
+                                duration=12.0)
+    FaultInjector(sched, system).attach(engine)
+    engine.run(reqs, horizon=40.0)
+    assert system.fault_stats["slowdowns"] == 1
+    assert not any(isinstance(i.executor, SlowExecutor)
+                   for i in system.instances)   # restored after dur
+    _finished_are_complete(reqs)
+
+
+def test_injector_never_kills_the_last_instance():
+    system = make_system("vllm", _cost(), 2, SLO, failure="drop")
+    engine = SimulationEngine(system)
+    sched = make_fault_schedule("crash:mtbf=2", seed=4, duration=20.0)
+    inj = FaultInjector(sched, system).attach(engine)
+    engine.run([], horizon=30.0)
+    assert len(system.instances) == 1           # one crash landed, rest
+    s = inj.summary()                           # skipped at the floor
+    assert s["applied"].get("crash") == 1
+    assert s["n_skipped"] == len(sched.events) - 1
+    assert all(e.get("skipped") == "last-instance"
+               for e in s["log"][1:])
+
+
+# --------------------------------------------------------------------- #
+# actuator: down-during-provisioning cancel + fault repair
+# --------------------------------------------------------------------- #
+def _make_actuator(n=4, delay=5.0):
+    from repro.control import ControllerConfig, ScalingTimeline
+    from repro.control.actuator import Actuator
+    system = make_system("ecoserve", _cost(), n, SLO)
+    engine = SimulationEngine(system)
+    cfg = ControllerConfig(provision_delay=delay)
+    act = Actuator(system, engine, cfg, ScalingTimeline())
+    return system, engine, act
+
+
+_SIGNALS = {"queue_depth": 0.0, "attainment_window": 1.0}
+
+
+def test_down_while_provisioning_cancels_the_commission():
+    """Regression for the actuator race: a "down" decision while a
+    commission was still in flight used to shrink the live pool AND let
+    the provisioning instance join anyway — overshooting the target.
+    The fix revokes the pending commission instead."""
+    system, engine, act = _make_actuator(n=4, delay=5.0)
+    assert act.apply(+1, 0.0, _SIGNALS)
+    assert act.n_target == 5 and len(system.instances) == 4
+    assert act.apply(-1, 1.0, _SIGNALS)          # delay > decision gap
+    assert act.n_target == 4
+    assert len(system.instances) == 4            # live pool untouched
+    engine.run([], horizon=20.0)                 # commission event fires
+    assert len(system.instances) == 4            # ...and was revoked
+    assert act.n_target == 4
+    downs = [e for e in act.timeline.events if e.action == "down"]
+    assert downs and downs[0].t_effective == downs[0].t_decision
+
+
+def test_down_cancels_only_one_of_two_pending_commissions():
+    system, engine, act = _make_actuator(n=4, delay=5.0)
+    act.apply(+1, 0.0, _SIGNALS)
+    act.apply(+1, 0.5, _SIGNALS)
+    act.apply(-1, 1.0, _SIGNALS)
+    assert act.n_target == 5
+    engine.run([], horizon=20.0)
+    assert len(system.instances) == 5 and act.n_target == 5
+
+
+def test_down_with_no_pending_commission_shrinks_live_pool():
+    system, engine, act = _make_actuator(n=4, delay=5.0)
+    assert act.apply(-1, 0.0, _SIGNALS)
+    assert len(system.instances) == 3 and act.n_target == 3
+
+
+def test_repair_recommissions_capacity_lost_to_faults():
+    """The control loop's repair path: a crash drops ``n_live`` (and so
+    ``n_target``) below the controller's last committed intent; repair
+    commissions a replacement — and ONLY for fault losses, never after
+    the controller's own down decisions."""
+    system, engine, act = _make_actuator(n=4, delay=2.0)
+    act.note_intent(act.n_target)                # controller committed 4
+    assert act.repair(0.0, _SIGNALS) == 0        # nothing lost: no-op
+    system.fault_crash(system.instances[0], 1.0, engine)
+    assert act.n_target == 3
+    assert act.repair(1.5, _SIGNALS) == 1
+    assert act.n_target == 4                     # committed, not yet live
+    engine.run([], horizon=10.0)
+    assert len(system.instances) == 4            # replacement landed
+    rep = [e for e in act.timeline.events if e.action == "repair"]
+    assert len(rep) == 1
+    assert rep[0].t_effective == pytest.approx(1.5 + 2.0)
+    # a deliberate down must NOT be repaired: intent moves with it
+    act.apply(-1, 5.0, _SIGNALS)
+    act.note_intent(act.n_target)
+    assert act.repair(5.5, _SIGNALS) == 0

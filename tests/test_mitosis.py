@@ -6,7 +6,7 @@ import pytest
 
 from repro.core.instance import Instance
 from repro.core.mitosis import InstanceHandler, OverallScheduler, \
-    register_instance
+    StaleHandlerError, register_instance, registry_size
 from repro.core.slo import SLO
 
 
@@ -96,6 +96,59 @@ def test_migration_records_fast():
     assert s.migrations
     for m in s.migrations:
         assert m.seconds < 0.1   # paper: <100 ms; pickle is microseconds
+
+
+def test_registry_does_not_leak_through_scale_churn():
+    """Regression for the actor-registry leak: contraction/merge used to
+    leave retired instances registered forever, so repeated scale churn
+    grew ``_ACTOR_REGISTRY`` without bound.  Churn must return the
+    registry exactly to its pre-churn size."""
+    baseline = registry_size()
+    s = make_sched()
+    for cycle in range(3):
+        for i in range(7):          # crosses the split threshold
+            s.add_instance(make_inst(1000 + cycle * 10 + i))
+        assert registry_size() == baseline + 7
+        for _ in range(7):          # crosses the merge threshold back
+            assert s.remove_instance() is not None
+        assert registry_size() == baseline, f"leak on cycle {cycle}"
+    assert s.total_instances == 0
+
+
+def test_discard_instance_unregisters_named_victim():
+    """Fault teardown removes a *specific* instance (not the contraction
+    heuristic's pick) and must unregister it too."""
+    baseline = registry_size()
+    s = make_sched()
+    insts = [make_inst(2000 + i) for i in range(4)]
+    for inst in insts:
+        s.add_instance(inst)
+    victim = insts[2]
+    assert s.discard_instance(victim)
+    assert registry_size() == baseline + 3
+    assert s.total_instances == 3
+    assert not s.discard_instance(victim)    # already gone: no double-pop
+
+
+def test_stale_handler_resolve_raises_clear_error():
+    s = make_sched()
+    inst = make_inst(3000)
+    s.add_instance(inst)
+    h = InstanceHandler.for_instance(inst)
+    blob = h.serialize()
+    s.discard_instance(inst)                 # unregisters the actor
+    with pytest.raises(StaleHandlerError, match="3000"):
+        InstanceHandler.deserialize(blob).resolve()
+
+
+def test_dead_instance_handler_resolve_raises():
+    """A handler to a registered-but-dead instance (crashed mid-decode)
+    must not resolve: migrating work onto a corpse corrupts state."""
+    inst = make_inst(3001)
+    h = InstanceHandler.for_instance(inst)
+    inst.alive = False
+    with pytest.raises(StaleHandlerError):
+        h.resolve()
 
 
 def test_migration_does_not_interrupt_execution():
