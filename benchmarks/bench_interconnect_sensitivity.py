@@ -1,0 +1,246 @@
+"""Interconnect sensitivity: commodity-link degradation grades, EcoServe
+and a NoDG baseline vs the FuDG baselines (the paper's
+commodity-interconnect premise).
+
+Runs ``interconnect_runner()`` — the canonical grid behind
+``tests/golden/interconnect_sensitivity.json``: EcoServe, vLLM (NoDG),
+DistServe, and MoonCake on the bursty shape, each cell swept over five
+network grades — a clean fabric, then progressively oversubscribed /
+lossy links expressed in the PR 7 network fault grammar
+(``netdelay:ms`` / ``netdegrade:F`` / ``netloss:p``).  Every grade
+replays the identical arrival sequence as the clean cell (the fault axis
+is seed-neutral), so the attainment delta isolates the interconnect.
+
+The headline assertions:
+
+* **FuDG tracks the fabric** — DistServe's and MoonCake's min-phase
+  attainment is monotonically non-increasing across the grades and
+  collapses to zero at the worst one: every request's KV cache crosses
+  the degraded link between prefill and decode, so divided bandwidth,
+  added store-and-forward latency, and loss-driven retry/timeout churn
+  compound directly into missed decodes;
+* **EcoServe/NoDG hold the clean-link frontier** — both keep all phases
+  of a request on one instance and exchange only control-plane
+  messages, so their min-phase attainment stays within 10% of the
+  clean-link value at every grade (EcoServe's transport counters pin
+  the structural reason: zero cross-instance KV transfers sent).
+
+    PYTHONPATH=src python -m benchmarks.bench_interconnect_sensitivity
+    PYTHONPATH=src python -m benchmarks.bench_interconnect_sensitivity \
+        --smoke --stream rows.jsonl     # the CI cell: saturated link
+    PYTHONPATH=src python -m benchmarks.bench_interconnect_sensitivity \
+        --write-golden                  # re-pin the golden fixture
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import platform
+import time
+
+from benchmarks.common import emit
+from repro.simulator.runner import ExperimentRunner, interconnect_runner
+
+GOLDEN_PATH = (pathlib.Path(__file__).resolve().parent.parent
+               / "tests" / "golden" / "interconnect_sensitivity.json")
+BENCH_PATH = (pathlib.Path(__file__).resolve().parent
+              / "BENCH_interconnect.json")
+
+FUDG = ("distserve", "mooncake")
+HOLDERS = ("ecoserve", "vllm")
+
+
+def _grades(meta: dict) -> list:
+    return ["none" if f is None else f for f in meta["faults"]]
+
+
+def _pmin(grid, meta, strat, grade):
+    scen = meta["scenarios"][0]
+    rate = meta["rates"][0]
+    return grid[strat][scen][grade][rate]["attainment_phase_min"]
+
+
+def _cell_table(results: dict) -> None:
+    grid = ExperimentRunner.grid(results)
+    meta = results["meta"]
+    scen, rate = meta["scenarios"][0], meta["rates"][0]
+    print("strategy,grade,att_phase_min,attainment,completion,"
+          "kv_sent,kv_lost,retries,timeouts")
+    for strat in meta["strategies"]:
+        for grade in _grades(meta):
+            m = grid[strat][scen][grade][rate]
+            tr = m.get("faults", {}).get("transport", {})
+            print(f"{strat},{grade},"
+                  f"{m['attainment_phase_min']:.4f},"
+                  f"{m['attainment']:.4f},{m['completion']:.4f},"
+                  f"{tr.get('sent', 0)},{tr.get('lost', 0)},"
+                  f"{tr.get('retries', 0)},{tr.get('timeouts', 0)}")
+
+
+def _assert_fudg_collapse(results: dict) -> dict:
+    """Both FuDG baselines' min-phase attainment must be monotonically
+    non-increasing across the grades and zero at the worst one."""
+    grid = ExperimentRunner.grid(results)
+    meta = results["meta"]
+    out = {}
+    for strat in FUDG:
+        pmins = [_pmin(grid, meta, strat, g) for g in _grades(meta)]
+        out[strat] = pmins
+        for a, b in zip(pmins, pmins[1:]):
+            assert b <= a + 1e-12, (
+                f"{strat} min-phase attainment must degrade "
+                f"monotonically across the grades, got {pmins}")
+        assert pmins[-1] == 0.0, (
+            f"{strat} must collapse at the worst grade, got {pmins}")
+        assert pmins[0] > 0.9, (
+            f"{strat} must be healthy on the clean fabric, got {pmins}")
+    return out
+
+
+def _assert_holders_flat(results: dict) -> dict:
+    """EcoServe and the NoDG baseline must stay within 10% of their
+    clean-link min-phase attainment at every grade; EcoServe's transport
+    counters must show zero cross-instance KV transfers."""
+    grid = ExperimentRunner.grid(results)
+    meta = results["meta"]
+    scen, rate = meta["scenarios"][0], meta["rates"][0]
+    out = {}
+    for strat in HOLDERS:
+        pmins = [_pmin(grid, meta, strat, g) for g in _grades(meta)]
+        out[strat] = pmins
+        clean = pmins[0]
+        assert clean > 0.8, (strat, pmins)
+        for g, p in zip(_grades(meta), pmins):
+            assert p >= 0.9 * clean, (
+                f"{strat} must hold within 10% of its clean-link "
+                f"attainment at every grade; {g} gave {p:.4f} vs clean "
+                f"{clean:.4f}")
+    for strat in HOLDERS:
+        for grade in _grades(meta)[1:]:
+            tr = grid[strat][scen][grade][rate]["faults"]["transport"]
+            assert tr["sent"] == 0, (
+                f"{strat} must move no KV across the fabric, got "
+                f"{tr['sent']} transfers at {grade}")
+    return out
+
+
+def run(stream: str = None):
+    runner = interconnect_runner()
+    runner.stream_path = stream
+    t0 = time.time()
+    results = runner.run()
+    dt = time.time() - t0
+    assert not results.get("errors"), results.get("errors")
+    print("\n== Interconnect sensitivity: commodity-link degradation "
+          "grades ==")
+    _cell_table(results)
+    collapse = _assert_fudg_collapse(results)
+    flat = _assert_holders_flat(results)
+    print("\n  min-phase attainment across the grades:")
+    for strat, pmins in {**flat, **collapse}.items():
+        print(f"    {strat}: " + ", ".join(f"{p:.3f}" for p in pmins))
+    print("  FuDG collapses with the fabric; EcoServe/NoDG hold the "
+          "clean-link frontier (zero KV bytes on the wire)")
+    emit("interconnect_sensitivity", dt * 1e6,
+         f"cells={len(results['cells'])}")
+    return {"results": results, "collapse": collapse, "flat": flat}
+
+
+def run_smoke(stream: str = None) -> dict:
+    """The CI cell: MoonCake on the saturated lossy link — proves the
+    network plane, transport retry/timeout machinery, and KV-loss
+    accounting end to end in one cell."""
+    base = interconnect_runner()
+    worst = base.faults[-1]
+    runner = ExperimentRunner(
+        strategies=("mooncake",), scenarios=("bursty",),
+        rates=base.rates, faults=(worst,), phases=base.phases,
+        model=base.model, hw=base.hw, tp=base.tp, pp=base.pp,
+        n_instances=base.n_instances, workload=base.workload,
+        duration=base.duration, warmup=base.warmup,
+        base_seed=base.base_seed, n_workers=1, stream_path=stream)
+    results = runner.run()
+    assert not results.get("errors"), results.get("errors")
+    (cell,) = results["cells"]
+    m = cell["metrics"]
+    tr = m["faults"]["transport"]
+    print(f"smoke: mooncake on '{worst}' "
+          f"phase_min={m['attainment_phase_min']:.3f} "
+          f"sent={tr['sent']} lost={tr['lost']} retries={tr['retries']} "
+          f"timeouts={tr['timeouts']}")
+    assert tr["sent"] > 0, "no KV transfers crossed the transport"
+    assert tr["retries"] > 0 or tr["lost"] > 0, (
+        "a saturated lossy link must force retries or losses")
+    assert m["attainment_phase_min"] < 0.5, (
+        "MoonCake must visibly degrade on the saturated link")
+    assert m["completion"] < 1.0, (
+        "lost KV transfers must surface as unfinished requests")
+    return results
+
+
+def write_bench() -> None:
+    """Record the sweep's headline numbers — the per-strategy min-phase
+    attainment frontier across the grades plus run cost — as a committed
+    artifact (``benchmarks/BENCH_interconnect.json``), so a future
+    change to the transport or the grades shows up as a reviewable
+    diff, not just a golden blob."""
+    out = run()
+    results = out["results"]
+    grid = ExperimentRunner.grid(results)
+    meta = results["meta"]
+    scen, rate = meta["scenarios"][0], meta["rates"][0]
+    frontier = {}
+    for strat in meta["strategies"]:
+        per_grade = {}
+        for grade in _grades(meta):
+            m = grid[strat][scen][grade][rate]
+            tr = m.get("faults", {}).get("transport", {})
+            per_grade[grade] = {
+                "att_phase_min": round(m["attainment_phase_min"], 4),
+                "completion": round(m["completion"], 4),
+                "kv_sent": tr.get("sent", 0),
+                "kv_lost": tr.get("lost", 0),
+                "retries": tr.get("retries", 0),
+            }
+        frontier[strat] = per_grade
+    doc = {
+        "grades": _grades(meta),
+        "frontier": frontier,
+        "cells": len(results["cells"]),
+        "host": {"machine": platform.machine(),
+                 "python": platform.python_version()},
+    }
+    BENCH_PATH.write_text(json.dumps(doc, indent=1, sort_keys=True)
+                          + "\n")
+    print(f"wrote {BENCH_PATH}")
+
+
+def write_golden() -> None:
+    results = interconnect_runner().run()
+    assert not results.get("errors"), results.get("errors")
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    ExperimentRunner.save(results, GOLDEN_PATH)
+    print(f"wrote {len(results['cells'])} cells to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one saturated-link MoonCake cell (CI)")
+    ap.add_argument("--stream", default=None, metavar="PATH",
+                    help="append one JSONL row per finished cell")
+    ap.add_argument("--write-golden", action="store_true",
+                    help="regenerate tests/golden/"
+                         "interconnect_sensitivity.json")
+    ap.add_argument("--write-bench", action="store_true",
+                    help="rewrite benchmarks/BENCH_interconnect.json")
+    args = ap.parse_args()
+    if args.write_golden:
+        write_golden()
+    elif args.write_bench:
+        write_bench()
+    elif args.smoke:
+        run_smoke(stream=args.stream)
+    else:
+        run(stream=args.stream)

@@ -77,6 +77,7 @@ class DistServeSystem(PolicySystemBase):
     def _on_prefill_handoff(self, inst, reqs: List[Request], now,
                             engine: SimulationEngine) -> None:
         link = self.links[self._node_of[inst.iid]]
+        tr = self.transport
         for r in reqs:
             targets = [i for i in self.decode_insts if i.alive]
             if not targets:
@@ -84,9 +85,14 @@ class DistServeSystem(PolicySystemBase):
                 # cache has nowhere to land, so the request is lost
                 self.fault_lost_requests([r], now, engine)
                 continue
+            reachable = tr.filter_reachable(targets, now)
+            if reachable:
+                # prefer reachable decoders; with every one unreachable
+                # the transfer goes out anyway and the retry/timeout
+                # machinery decides its fate
+                targets = reachable
             target = min(targets, key=lambda i: i.kv_tokens_used())
             nbytes = self.cost.kv_transfer_bytes(r.prompt_len)
-            done_t = link.transfer(nbytes, now)
 
             def deliver(r=r, target=target):
                 if not target.alive:
@@ -102,4 +108,11 @@ class DistServeSystem(PolicySystemBase):
                 target.add_decoding(r)
                 engine.activate(target)
 
-            engine.push(done_t, deliver)
+            def on_lost(r=r):
+                # retry budget exhausted on the degraded interconnect:
+                # the KV never landed, the request flows through the
+                # failure policy like any other in-transit loss
+                self.fault_lost_requests([r], engine.now, engine)
+
+            tr.transfer(engine, inst.iid, target.iid, nbytes, now,
+                        deliver, on_lost, link=link)

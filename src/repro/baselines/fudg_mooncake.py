@@ -14,6 +14,7 @@ from typing import Dict, List
 from repro.core.instance import Instance
 from repro.core.request import Request, RequestState
 from repro.core.system import PolicySystemBase
+from repro.core.transport import POOL
 from repro.simulator.cost_model import InstanceCostModel
 from repro.simulator.engine import Link, SimulationEngine
 
@@ -68,6 +69,7 @@ class MoonCakeSystem(PolicySystemBase):
     def _on_prefill_handoff(self, inst, reqs: List[Request], now,
                             engine: SimulationEngine) -> None:
         src_nic = self.nic[inst.iid]
+        tr = self.transport
         for r in reqs:
             targets = [i for i in self.decode_insts if i.alive]
             if not targets:
@@ -75,17 +77,27 @@ class MoonCakeSystem(PolicySystemBase):
                 # cache has nowhere to land, so the request is lost
                 self.fault_lost_requests([r], now, engine)
                 continue
+            reachable = tr.filter_reachable(targets, now)
+            if reachable:
+                # prefer reachable decoders; with every one unreachable
+                # the pool upload still happens and the download's
+                # retry/timeout machinery decides the request's fate
+                targets = reachable
             target = min(targets, key=lambda i: i.kv_tokens_used())
             nbytes = self.cost.kv_transfer_bytes(r.prompt_len)
-            t_up = src_nic.transfer(nbytes, now)           # prefill -> pool
 
-            def stage2(r=r, target=target, nbytes=nbytes):
+            def on_lost(r=r):
+                # either NIC traversal exhausted its retry budget: the
+                # KV never reached the decoder, the request flows
+                # through the failure policy like any in-transit loss
+                self.fault_lost_requests([r], engine.now, engine)
+
+            def stage2(r=r, target=target, nbytes=nbytes, on_lost=on_lost):
                 if not target.alive:
                     # decode target died while the KV sat in the pool
                     self.fault_lost_requests([r], engine.now, engine)
                     return
                 dst_nic = self.nic[target.iid]
-                t_down = dst_nic.transfer(nbytes, engine.now)  # pool -> decode
 
                 def deliver(r=r, target=target):
                     if not target.alive:
@@ -100,6 +112,8 @@ class MoonCakeSystem(PolicySystemBase):
                     target.add_decoding(r)
                     engine.activate(target)
 
-                engine.push(t_down, deliver)
+                tr.transfer(engine, POOL, target.iid, nbytes, engine.now,
+                            deliver, on_lost, link=dst_nic)  # pool -> decode
 
-            engine.push(t_up, stage2)
+            tr.transfer(engine, inst.iid, POOL, nbytes, now,
+                        stage2, on_lost, link=src_nic)       # prefill -> pool

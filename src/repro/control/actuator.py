@@ -217,6 +217,11 @@ class ControlLoopHarness:
         self.timeline = ScalingTimeline()
         self.actuator = Actuator(system, engine, cfg, self.timeline)
         self._next_tick = cfg.interval
+        # last signal snapshot DELIVERED over the telemetry channel; on
+        # a clean plane every snapshot arrives instantly, under network
+        # faults snapshots may arrive late or not at all and the
+        # controller decides on this (possibly stale) reading
+        self._inbox: Optional[Dict[str, float]] = None
 
     def attach(self) -> "ControlLoopHarness":
         orig_submit = self.system.submit
@@ -243,7 +248,29 @@ class ControlLoopHarness:
         # commissioned instances always land strictly in the future
         if now < self._next_tick:
             return
-        signals = self.collector.snapshot(self.system, self.engine, now)
+        snap = self.collector.snapshot(self.system, self.engine, now)
+        transport = getattr(self.system, "transport", None)
+        if transport is not None and transport.network is not None:
+            # telemetry crosses the degraded plane: the snapshot may be
+            # dropped (the controller keeps deciding on its last
+            # delivered one) or arrive a network delay late
+            fate, d = transport.snapshot_channel(now)
+            if fate == "ok":
+                self._inbox = snap
+            elif fate == "delay":
+                self.engine.push_call(now + d, self._receive_snapshot,
+                                      snap)
+        else:
+            self._inbox = snap
+        if self._inbox is None:
+            # nothing ever arrived (first snapshots all lost): no basis
+            # to decide on, but the tick cadence must not stall
+            self.timeline.record_tick(now, len(self.system.instances),
+                                      self.actuator.n_target)
+            self._next_tick = now + self.controller.config.interval
+            return
+        signals = dict(self._inbox)
+        signals["stale"] = now - self._inbox["t"]
         # replace capacity lost to faults first (n_target below the last
         # committed intent) so the controller decides against the pool it
         # actually asked for; a no-op in fault-free runs
@@ -257,3 +284,9 @@ class ControlLoopHarness:
         self.timeline.record_tick(now, len(self.system.instances),
                                   self.actuator.n_target)
         self._next_tick = now + self.controller.config.interval
+
+    def _receive_snapshot(self, snap: Dict[str, float]) -> None:
+        """A delayed telemetry snapshot finally arrived; keep the newest
+        reading (a slower older one must not overwrite a fresher one)."""
+        if self._inbox is None or snap["t"] >= self._inbox["t"]:
+            self._inbox = snap

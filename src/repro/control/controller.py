@@ -59,6 +59,11 @@ class ControllerConfig:
     # inside the hysteresis band cannot sustain a limit cycle
     regret_window: float = 16.0
     regret_cap: float = 8.0          # max cooldown_down multiplier
+    # staleness guard: with the telemetry channel degraded (network
+    # faults dropping/delaying snapshots) a controller acting on a
+    # reading older than this holds its last decision instead of
+    # scaling on stale evidence
+    staleness_limit: float = 6.0
     # threshold baseline
     threshold_up: float = 16.0       # absolute queue depth forcing up
     # actuation
@@ -123,6 +128,12 @@ class TargetBandController(ScalingController):
 
     def _decide(self, signals, n_target):
         cfg = self.config
+        if signals.get("stale", 0.0) > cfg.staleness_limit:
+            # the snapshot is too old to act on (dropped/delayed
+            # telemetry): hold the last decision — and do NOT arm the
+            # breach counters off evidence that no longer describes the
+            # pool
+            return 0
         now = signals["t"]
         att = signals["attainment_window"]
         q_per_inst = signals["queue_depth"] / max(1, n_target)

@@ -83,7 +83,12 @@ class SignalCollector:
         """Min-over-classes attainment over the trailing window; None
         until ``min_samples`` completions populate it — one straggler in
         a near-empty window must not read as an SLO collapse (or a
-        single lucky request as perfect health)."""
+        single lucky request as perfect health).  The guard is
+        *per-class*: a class with fewer than ``min_samples`` window
+        completions is excluded from the min (its one straggler says
+        nothing), and only when NO class qualifies is the whole signal
+        None.  With a single class this is exactly the old global
+        guard."""
         if len(self._finished) < self.min_samples:
             return None
         hits: Dict[str, int] = {}
@@ -91,7 +96,9 @@ class SignalCollector:
         for _, met, cls in self._finished:
             tot[cls] = tot.get(cls, 0) + 1
             hits[cls] = hits.get(cls, 0) + (1 if met else 0)
-        return min(hits[c] / tot[c] for c in tot)
+        vals = [hits[c] / tot[c] for c in tot
+                if tot[c] >= self.min_samples]
+        return min(vals) if vals else None
 
     @staticmethod
     def queue_depth(system) -> int:

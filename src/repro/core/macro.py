@@ -20,9 +20,15 @@ class MacroInstance:
     def __init__(self, mid: int, instances: List[Instance],
                  slo: Union[SLO, SLOClassSet],
                  predict_prefill: Callable[[int], float],
-                 conservative: bool = False):
+                 conservative: bool = False,
+                 reachable: Optional[Callable[[int, float], bool]] = None):
         self.mid = mid
         self.instances: List[Instance] = list(instances)
+        # scheduler-side health predicate (iid, now) -> bool; None means
+        # an ideal coordination plane.  Under network faults the rolling
+        # activation fails over past unreachable instances instead of
+        # handing work to a black-holed one.
+        self.reachable = reachable
         # accept a bare SLO (legacy single-tenant callers) or a class set;
         # routing always resolves the REQUEST's class (Algorithm 1 becomes
         # SLO-aware: constraints check against the request's own budgets)
@@ -46,6 +52,10 @@ class MacroInstance:
         for k in range(n):
             idx = (self._active_idx + k) % n
             inst = self.instances[idx]
+            if (self.reachable is not None
+                    and not self.reachable(inst.iid, now)):
+                # fail over: the cycle skips the unreachable instance
+                continue
             status = inst.status(now, slo.tpot)
             if check_constraints(status, req, slo,
                                  self.predict_prefill, now,
@@ -57,8 +67,15 @@ class MacroInstance:
 
     def route_forced(self, req: Request, now: float) -> Instance:
         """Admission of last resort (SLO already lost): pick the instance
-        with the most free KV memory so the request still completes."""
-        inst = max(self.instances,
+        with the most free KV memory so the request still completes.
+        Prefers reachable instances; with every one unreachable it still
+        admits somewhere (the request would otherwise be dropped)."""
+        pool = self.instances
+        if self.reachable is not None:
+            ok = [i for i in pool if self.reachable(i.iid, now)]
+            if ok:
+                pool = ok
+        inst = max(pool,
                    key=lambda i: i.kv_capacity_tokens - i.kv_tokens_used())
         self.rejected += 1
         inst.admit(req, now)

@@ -102,10 +102,12 @@ class OverallScheduler:
 
     def __init__(self, slo, predict_prefill: Callable[[int], float],
                  n_lower: int = 4, n_upper: int = 16,
-                 conservative: bool = False):
+                 conservative: bool = False, reachable=None):
         """``slo`` is a bare ``SLO`` or a multi-tenant ``SLOClassSet``;
         dispatch hands the class set down to every macro instance so each
-        request is admitted against its own class budgets."""
+        request is admitted against its own class budgets.  ``reachable``
+        is the transport's (iid, now) -> bool health view; macro routing
+        fails over around unreachable instances under network faults."""
         assert 1 <= n_lower <= n_upper
         self.slo_set: SLOClassSet = as_slo_class_set(slo)
         self.slo: SLO = self.slo_set.default_slo
@@ -113,6 +115,7 @@ class OverallScheduler:
         self.n_lower = n_lower
         self.n_upper = n_upper
         self.conservative = conservative
+        self.reachable = reachable
         self.macros: List[MacroInstance] = []
         self._next_mid = 0
         self.migrations: List[MigrationRecord] = []
@@ -132,7 +135,8 @@ class OverallScheduler:
     def new_macro(self, instances: List[Instance]) -> MacroInstance:
         m = MacroInstance(self._next_mid, instances, self.slo_set,
                           self.predict_prefill,
-                          conservative=self.conservative)
+                          conservative=self.conservative,
+                          reachable=self.reachable)
         self._next_mid += 1
         self.macros.append(m)
         return m

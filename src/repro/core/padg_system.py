@@ -59,7 +59,8 @@ class EcoServeSystem(PolicySystemBase):
     def _build(self, n_instances: int) -> None:
         self.sched = OverallScheduler(
             self.slo_set, self.cost.predict_prefill, n_lower=self.n_lower,
-            n_upper=self.n_upper, conservative=self.plus_plus)
+            n_upper=self.n_upper, conservative=self.plus_plus,
+            reachable=self.transport.instance_reachable)
         for i in range(n_instances):
             inst = self._make_instance(i)
             self.instances.append(inst)

@@ -186,15 +186,26 @@ class RoutingPolicy:
         return self.name
 
 
+def _reachable(system, instances, now):
+    """Transport-filtered candidate pool: the same list object on the
+    clean plane (zero cost), the reachable subset under network faults.
+    Guarded so bare test stand-ins without a transport still work."""
+    tr = getattr(system, "transport", None)
+    if tr is None or tr.network is None:
+        return instances
+    return tr.filter_reachable(instances, now)
+
+
 class LeastKVRouting(RoutingPolicy):
     """vLLM-style: the replica with the fewest outstanding KV tokens."""
 
     name = "least-kv"
 
     def select(self, system, req, now):
-        if not system.instances:
+        pool = _reachable(system, system.instances, now)
+        if not pool:
             return None
-        return min(system.instances, key=lambda i: i.kv_tokens_used())
+        return min(pool, key=lambda i: i.kv_tokens_used())
 
 
 class RoundRobinRouting(RoutingPolicy):
@@ -256,9 +267,10 @@ class PrefillPartitionedRouting(RoutingPolicy):
     name = "prefill-least-pending"
 
     def select(self, system, req, now):
-        if not system.prefill_insts:
+        pool = _reachable(system, system.prefill_insts, now)
+        if not pool:
             return None
-        return min(system.prefill_insts, key=lambda i: i.pending_tokens)
+        return min(pool, key=lambda i: i.pending_tokens)
 
     def add_instance(self, system, inst):
         # decode is the paper's FuDG bottleneck under MHA KV traffic

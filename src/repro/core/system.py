@@ -30,11 +30,14 @@ from typing import (Any, Deque, Dict, List, Optional, Protocol,
                     runtime_checkable)
 
 from repro.core.instance import Instance
-from repro.core.policies import (AdmissionPolicy, QueueDiscipline,
-                                 RoutingPolicy, make_admission,
-                                 make_queue_discipline, make_routing)
+from repro.core.mitosis import unregister_instance
+from repro.core.policies import (AdmissionPolicy, FIFODiscipline,
+                                 QueueDiscipline, RoutingPolicy,
+                                 make_admission, make_queue_discipline,
+                                 make_routing)
 from repro.core.request import Request
 from repro.core.slo import SLO, SLOClassSet, as_slo_class_set
+from repro.core.transport import Transport
 from repro.faults.policies import FailurePolicy, make_failure_policy
 
 
@@ -118,6 +121,12 @@ class PolicySystemBase:
             "resubmitted": 0, "requeued": 0, "migrated": 0}
         self.queue: Deque[Request] = deque()
         self.instances: List[Instance] = []
+        # every cross-instance / cross-plane interaction (FuDG KV
+        # hand-offs, evacuation RPCs, controller snapshots) routes
+        # through the transport; ideal until a fault schedule with
+        # network clauses attaches a NetworkModel.  Built before
+        # _build(): PaDG construction wires its reachability predicate.
+        self.transport = Transport()
         # set by StrategySpec.build; direct construction keeps family name
         self.spec_name: Optional[str] = None
         self.provenance: str = ""
@@ -186,8 +195,19 @@ class PolicySystemBase:
             else:
                 fails += 1
         if admitted:
-            self.queue = deque(
-                r for r in self.queue if id(r) not in admitted)
+            if isinstance(self.queue_discipline, FIFODiscipline):
+                # FIFO drained a prefix of the deque: pop it and push
+                # back the survivors — O(tried) per slot boundary, not
+                # O(queue) (an overload backlog would otherwise pay a
+                # full rebuild on every admitted request)
+                for _ in range(len(order)):
+                    self.queue.popleft()
+                self.queue.extendleft(
+                    r for r in reversed(order) if id(r) not in admitted)
+            else:
+                # priority disciplines admit from anywhere in the deque
+                self.queue = deque(
+                    r for r in self.queue if id(r) not in admitted)
 
     # ---------------- mitosis hooks (dynamic scaling bench) -------------- #
     def scale_up(self, engine=None) -> Instance:
@@ -223,6 +243,10 @@ class PolicySystemBase:
         requests (post-policy: requeued, migrated, or FAILED)."""
         inst.alive = False
         self.detach_instance(inst)
+        # macro routing unregisters through the scheduler; on the
+        # baselines nothing else does, and handlers minted during
+        # evacuation (migrate:K targets) would leak actor-table entries
+        unregister_instance(inst)
         self._evacuating.pop(inst.iid, None)
         lost = list(inst.pending) + list(inst.decoding)
         for r in list(inst.pending):
@@ -254,6 +278,7 @@ class PolicySystemBase:
         if not inst.alive:
             return
         inst.alive = False
+        unregister_instance(inst)
         lost = list(inst.pending) + list(inst.decoding)
         for r in list(inst.pending):
             inst.remove_pending(r)

@@ -22,6 +22,7 @@ arrivals across fault levels, so degradation deltas isolate the fault).
 Depends only on ``repro.core`` — the simulator imports *us*.
 """
 from repro.faults.injector import FaultInjector, SlowExecutor
+from repro.faults.network import NETWORK_KINDS, NetworkModel
 from repro.faults.policies import (FAILURE_POLICIES, DropFailure,
                                    FailurePolicy, MigrateFailure,
                                    ResubmitFailure, make_failure_policy)
@@ -30,6 +31,7 @@ from repro.faults.schedule import (FAULT_KINDS, FaultEvent, FaultSchedule,
 
 __all__ = [
     "FaultInjector", "SlowExecutor",
+    "NETWORK_KINDS", "NetworkModel",
     "FAILURE_POLICIES", "DropFailure", "FailurePolicy", "MigrateFailure",
     "ResubmitFailure", "make_failure_policy",
     "FAULT_KINDS", "FaultEvent", "FaultSchedule", "make_fault_schedule",

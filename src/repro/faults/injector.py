@@ -13,7 +13,9 @@ from __future__ import annotations
 from typing import Dict, List
 
 from repro.core.instance import ExecutorModel, Instance
-from repro.faults.schedule import FaultEvent, FaultSchedule
+from repro.faults.network import NETWORK_KINDS, NetworkModel
+from repro.faults.schedule import (FaultEvent, FaultSchedule,
+                                   _schedule_seed)
 
 
 class SlowExecutor:
@@ -51,6 +53,15 @@ class FaultInjector:
         self.log: List[Dict] = []
 
     def attach(self, engine) -> "FaultInjector":
+        if any(ev.kind in NETWORK_KINDS for ev in self.schedule.events):
+            # the schedule carries network clauses: build the degradation
+            # plane up front (seeded exactly like the schedule itself) so
+            # every transfer from t=0 routes through the degraded path
+            transport = getattr(self.system, "transport", None)
+            if transport is not None and transport.network is None:
+                transport.attach_network(NetworkModel(
+                    _schedule_seed(self.schedule.spec,
+                                   self.schedule.seed)))
         for ev in self.schedule.events:
             engine.push_call(ev.t, self._fire, ev, engine)
         return self
@@ -60,6 +71,10 @@ class FaultInjector:
         system = self.system
         live = [i for i in system.instances if i.alive]
         entry: Dict = {"t": round(engine.now, 6), "kind": ev.kind}
+        if ev.kind in NETWORK_KINDS:
+            self._fire_network(ev, engine, live, entry)
+            self.log.append(entry)
+            return
         if ev.kind == "slow":
             victims = [i for i in live
                        if not isinstance(i.executor, SlowExecutor)]
@@ -92,6 +107,35 @@ class FaultInjector:
                 entry["notice"] = ev.notice
         self.log.append(entry)
 
+    def _fire_network(self, ev: FaultEvent, engine, live: List[Instance],
+                      entry: Dict) -> None:
+        """Toggle a degradation episode on the system transport's
+        network plane (``duration == 0`` means until the end of the
+        run).  Network events never touch ``fault_stats`` — the
+        transport keeps its own counters — so instance-fault goldens
+        keep their exact key sets."""
+        transport = getattr(self.system, "transport", None)
+        net = getattr(transport, "network", None)
+        if net is None:
+            entry["skipped"] = "no-transport"
+            return
+        if ev.kind == "partition":
+            if not live:
+                entry["skipped"] = "no-victim"
+                return
+            victim = live[int(ev.pick * len(live))]
+            net.begin_partition(victim.iid)
+            engine.push_call(engine.now + ev.duration,
+                             net.end_partition, victim.iid)
+            entry.update(iid=victim.iid, dur=ev.duration)
+            return
+        net.apply(ev.kind, ev.factor)
+        entry["value"] = ev.factor
+        if ev.duration > 0.0:
+            engine.push_call(engine.now + ev.duration,
+                             net.revert, ev.kind, ev.factor)
+            entry["dur"] = ev.duration
+
     @staticmethod
     def _end_slow(victim: Instance) -> None:
         if isinstance(victim.executor, SlowExecutor):
@@ -106,7 +150,7 @@ class FaultInjector:
         for e in self.log:
             if "skipped" not in e:
                 applied[e["kind"]] = applied.get(e["kind"], 0) + 1
-        return {
+        out = {
             "spec": self.schedule.spec,
             "n_scheduled": len(self.schedule.events),
             "applied": applied,
@@ -114,3 +158,9 @@ class FaultInjector:
             "log": self.log,
             "stats": dict(self.system.fault_stats),
         }
+        transport = getattr(self.system, "transport", None)
+        if transport is not None and transport.network is not None:
+            # only when the schedule engaged the network plane: rows of
+            # instance-fault-only cells keep their pre-transport shape
+            out["transport"] = transport.summary()
+        return out

@@ -163,12 +163,20 @@ class MigrateFailure(ResubmitFailure):
             self._resubmit(system, r, charge=False)
         targets = [i for i in system.instances
                    if i.alive and i.decode_here and i is not inst]
+        tr = getattr(system, "transport", None)
+        if tr is not None and tr.network is not None:
+            targets = tr.filter_reachable(targets, now)
         for r in list(inst.decoding):
             if not targets:
                 inst.remove_decoding(r)
                 self._resubmit(system, r, charge=True)
                 continue
             target = min(targets, key=lambda i: i.kv_tokens_used())
+            if tr is not None and not tr.try_rpc(now, inst.iid, target.iid):
+                # the handler round-trip failed on the degraded plane;
+                # the request stays put — evacuation re-runs at the next
+                # slot boundary and the notice deadline bounds the wait
+                continue
             # the paper's <100 ms logical migration: the serialized proxy
             # crosses the scheduler boundary, not the instance state
             handler = InstanceHandler.for_instance(target)

@@ -15,6 +15,19 @@ Spec grammar: ``;``-separated clauses, each ``<kind>:<k>=<v>,...``:
 * ``slow:t=10,factor=3,dur=8`` — straggler: one instance runs 3x slower
   for 8 s (``slow:mtbf=...`` draws recurring slowdowns)
 
+Network clauses (``repro.faults.network``) use positional arguments —
+one magnitude plus an optional episode length:
+
+* ``netdelay:ms[:dur]``   — every message +``ms`` milliseconds latency
+* ``netloss:p[:dur]``     — per-message loss probability ``p``
+* ``netdegrade:F[:dur]``  — link bandwidth divided by ``F``
+* ``partition:dur``       — one instance cut off for ``dur`` seconds
+
+With ``dur`` the episode starts at a seeded uniform time in
+[0, duration - dur); without it the effect covers the whole run
+(``FaultEvent.duration == 0`` encodes "until the end").  The magnitude
+rides in ``FaultEvent.factor`` (``netdelay`` converted to seconds).
+
 Victim choice is part of the schedule: every event carries a ``pick``
 uniform in [0, 1) drawn at build time; the injector maps it onto the
 live pool at fire time (``live[int(pick * len(live))]``).  The RNG is
@@ -30,17 +43,19 @@ from typing import List, Tuple
 
 import numpy as np
 
+from repro.faults.network import NETWORK_KINDS
+
 FAULT_KINDS = ("crash", "preempt", "slow")
 
 
 @dataclasses.dataclass(frozen=True)
 class FaultEvent:
     t: float                 # sim-time the fault fires
-    kind: str                # "crash" | "preempt" | "slow"
+    kind: str                # FAULT_KINDS or NETWORK_KINDS
     pick: float              # uniform [0,1) victim selector
     notice: float = 0.0      # preempt: seconds of warning before loss
-    factor: float = 1.0      # slow: executor-time multiplier
-    duration: float = 0.0    # slow: seconds the slowdown lasts
+    factor: float = 1.0      # slow: time multiplier; net: effect value
+    duration: float = 0.0    # episode seconds (net: 0 = whole run)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,14 +72,47 @@ def _schedule_seed(spec: str, seed: int) -> int:
     return (zlib.crc32(spec.encode()) ^ (seed * 2654435761)) & 0x7FFFFFFF
 
 
+def _parse_net_clause(kind: str, argstr: str, clause: str
+                      ) -> Tuple[str, List[float]]:
+    """Positional network clause: ``kind:value[:dur]`` (``partition`` is
+    duration-only)."""
+    parts = [p.strip() for p in argstr.split(":")] if argstr else []
+    try:
+        args = [float(p) for p in parts if p]
+    except ValueError:
+        raise ValueError(f"malformed network clause {clause!r} "
+                         f"(expected {kind}:<float>[:<dur>])")
+    if len(args) != len(parts):
+        raise ValueError(f"malformed network clause {clause!r} "
+                         f"(empty argument)")
+    want = (1,) if kind == "partition" else (1, 2)
+    if len(args) not in want:
+        raise ValueError(
+            f"network clause {clause!r} takes "
+            f"{'dur' if kind == 'partition' else 'value[:dur]'} "
+            f"({' or '.join(map(str, want))} args), got {len(args)}")
+    if kind == "netloss" and not 0.0 <= args[0] <= 1.0:
+        raise ValueError(f"netloss probability must be in [0, 1], got "
+                         f"{args[0]} in {clause!r}")
+    if kind == "netdegrade" and args[0] < 1.0:
+        raise ValueError(f"netdegrade factor must be >= 1, got "
+                         f"{args[0]} in {clause!r}")
+    if args[0] < 0.0 or (len(args) > 1 and args[1] <= 0.0):
+        raise ValueError(f"network clause {clause!r} needs non-negative "
+                         "value and positive dur")
+    return kind, args
+
+
 def _parse_clause(clause: str) -> Tuple[str, dict]:
     kind, _, argstr = clause.partition(":")
     kind = kind.strip()
     if kind == "spot":               # alias: recurring preemption
         kind = "preempt"
+    if kind in NETWORK_KINDS:
+        return _parse_net_clause(kind, argstr, clause)
     if kind not in FAULT_KINDS:
         raise KeyError(f"unknown fault kind {kind!r}; expected one of "
-                       f"{FAULT_KINDS} (or 'spot')")
+                       f"{FAULT_KINDS + NETWORK_KINDS} (or 'spot')")
     args = {}
     for part in filter(None, (p.strip() for p in argstr.split(","))):
         k, _, v = part.partition("=")
@@ -93,6 +141,21 @@ def make_fault_schedule(spec: str, seed: int,
     events: List[FaultEvent] = []
     for clause in filter(None, (c.strip() for c in spec.split(";"))):
         kind, args = _parse_clause(clause)
+        if kind in NETWORK_KINDS:
+            if kind == "partition":
+                value, dur = 0.0, args[0]
+            else:
+                value = args[0] / 1000.0 if kind == "netdelay" else args[0]
+                dur = args[1] if len(args) > 1 else 0.0   # 0 = whole run
+            if dur > 0.0:
+                # a bounded episode starts at a seeded uniform time
+                t = float(rng.uniform(0.0, max(0.0, duration - dur)))
+            else:
+                t = 0.0
+            events.append(FaultEvent(
+                t=t, kind=kind, pick=float(rng.random()),
+                factor=value, duration=dur))
+            continue
         notice = args.get("notice", 0.0)
         factor = args.get("factor", 2.0)
         dur = args.get("dur", 5.0)

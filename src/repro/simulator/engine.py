@@ -39,9 +39,15 @@ class Link:
         self.busy_until = 0.0
         self.bytes_moved = 0.0
 
-    def transfer(self, nbytes: float, now: float) -> float:
+    def transfer(self, nbytes: float, now: float, factor: float = 1.0,
+                 extra_latency: float = 0.0) -> float:
+        """Occupy the link for one message; ``factor`` divides the rated
+        bandwidth and ``extra_latency`` adds propagation delay (the
+        transport's network-degradation path; defaults are the clean
+        link, bit-identical to the historic two-argument form)."""
         start = max(now, self.busy_until)
-        done = start + self.latency + nbytes / self.bandwidth
+        done = (start + self.latency + extra_latency
+                + factor * (nbytes / self.bandwidth))
         self.busy_until = done
         self.bytes_moved += nbytes
         return done

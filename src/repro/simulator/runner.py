@@ -648,6 +648,39 @@ def fault_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
         base_seed=42, n_workers=n_workers)
 
 
+def interconnect_runner(n_workers: Optional[int] = None
+                        ) -> ExperimentRunner:
+    """The canonical interconnect-sensitivity grid: EcoServe, a NoDG
+    baseline (vLLM), and both FuDG baselines swept over commodity-link
+    degradation grades — from a clean fabric through a modestly
+    oversubscribed one to a saturated lossy link; pinned by
+    tests/golden/interconnect_sensitivity.json.
+
+    The claim the golden pins (the paper's commodity-interconnect
+    premise): FuDG moves every request's KV cache across the fabric
+    between prefill and decode, so its goodput tracks link quality and
+    collapses when bandwidth divides away and losses force
+    retry/timeout churn — while EcoServe and NoDG keep all phases of a
+    request on one instance, exchange only control-plane messages, and
+    hold their clean-link attainment across every grade.  The fault
+    axis is seed-neutral: each strategy's degraded cells replay the
+    identical arrival sequence as its clean cell, so the attainment
+    delta isolates the interconnect."""
+    return ExperimentRunner(
+        strategies=("ecoserve", "vllm", "distserve", "mooncake"),
+        scenarios=("bursty",),
+        rates=(4.0,),
+        faults=(None,
+                "netdelay:40",
+                "netdegrade:2;netdelay:120",
+                "netdegrade:8;netdelay:240;netloss:0.02",
+                "netdegrade:48;netdelay:480;netloss:0.08"),
+        phases=4,
+        model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
+        workload="sharegpt", duration=48.0, warmup=6.0,
+        base_seed=42, n_workers=n_workers)
+
+
 def static_scaling_runner(n_workers: Optional[int] = None
                           ) -> ExperimentRunner:
     """Fig. 9 static scaling folded into the unified runner: the instance

@@ -1,0 +1,222 @@
+"""Hardening layer riding on the PR 7 network plane: the actor-registry
+leak fix, the per-class attainment guard, and the composed-storm
+invariants.
+
+* **registry leak** — ``fault_crash`` / the preemption deadline used to
+  detach an instance without ``unregister_instance``, so every migration
+  target that later died stayed in the module-global actor registry
+  forever; a crash/preemption storm now leaves the registry holding live
+  instances only;
+* **per-class guard** — ``SignalCollector.attainment_window`` excludes
+  classes with fewer than ``min_samples`` window completions from the
+  min instead of letting one straggler read as an SLO collapse;
+* **composed storms** — crash + preempt + slow + network clauses in one
+  spec, injected end to end (hypothesis with a seeded fallback): no
+  request both finishes and fails, the injector log matches
+  ``fault_stats``, the registry stays bounded, and no retry budget —
+  request resubmits or transport attempts — is ever exceeded.
+"""
+import random
+
+import pytest
+
+from repro.baselines import make_system
+from repro.configs import get_config
+from repro.core.mitosis import registry_size
+from repro.core.request import Request, RequestState
+from repro.core.slo import DATASET_SLOS, SLO, SLOClassSet
+from repro.core.transport import TransportConfig
+from repro.control.signals import SignalCollector
+from repro.faults import FaultInjector, make_fault_schedule
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.simulator.engine import SimulationEngine
+from repro.simulator.scenarios import make_scenario
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+
+def _cost():
+    return InstanceCostModel(cfg=get_config("llama-30b"), hw=GPU_L20, tp=4)
+
+
+SLO_SET = DATASET_SLOS["sharegpt"]
+
+
+# --------------------------------------------------------------------- #
+# satellite: the actor-registry leak through the fault paths
+# --------------------------------------------------------------------- #
+def _storm(seed, spec="crash:mtbf=7;spot:mtbf=6,notice=1.5"):
+    """Run a crash/preemption storm on a baseline system whose migrate
+    policy registers survivor handlers at every evacuation — the exact
+    traffic that used to leak registry entries when a past target died."""
+    system = make_system("vllm", _cost(), 5, SLO_SET, failure="migrate")
+    scen = make_scenario("poisson", "sharegpt", 6.0, seed=seed)
+    reqs = scen.generate(30.0)
+    engine = SimulationEngine(system)
+    sched = make_fault_schedule(spec, seed=seed, duration=30.0)
+    inj = FaultInjector(sched, system).attach(engine)
+    engine.run(reqs, horizon=90.0)
+    return system, reqs, inj
+
+
+def test_registry_bounded_through_crash_preempt_storm():
+    baseline = registry_size()
+    system, _, _ = _storm(seed=13)
+    killed = (system.fault_stats["crashes"]
+              + system.fault_stats["preemptions"])
+    assert killed >= 3, "storm too gentle to exercise the leak"
+    # every registered actor is a live pool member: dead instances were
+    # unregistered by fault_crash / the preemption deadline, so repeated
+    # storms cannot grow the module-global registry without bound
+    assert registry_size() <= baseline + len(system.instances)
+    from repro.core.mitosis import _ACTOR_REGISTRY
+    for iid, inst in _ACTOR_REGISTRY.items():
+        assert inst.alive, f"dead instance {iid} leaked in the registry"
+
+
+def test_registry_does_not_grow_across_repeated_storms():
+    baseline = registry_size()
+    sizes = []
+    for seed in (21, 22, 23):
+        system, _, _ = _storm(seed=seed)
+        sizes.append(registry_size())
+    bound = baseline + 5                 # never above one pool's worth
+    assert all(s <= bound for s in sizes), (baseline, sizes)
+
+
+# --------------------------------------------------------------------- #
+# satellite: per-class min_samples guard in the attainment window
+# --------------------------------------------------------------------- #
+def _finished_req(rid, t, ok, cls):
+    r = Request(rid=rid, arrival_time=t, prompt_len=8, output_len=2,
+                slo_class=cls)
+    r.first_token_time = t + (0.2 if ok else 50.0)
+    r.finish_time = r.first_token_time + 0.01
+    r.tokens_generated = 2
+    return r
+
+
+def test_attainment_guard_is_per_class():
+    classes = SLOClassSet.make({
+        "default": SLO(ttft=1.0, tpot=0.1),
+        "batch": SLO(ttft=1.0, tpot=0.1)})
+    col = SignalCollector(classes, window=100.0, min_samples=4)
+    # 6 healthy default completions + ONE missed batch straggler: the
+    # straggler's class has 1 < min_samples window completions, so it is
+    # excluded from the min — the signal reads the healthy class, not a
+    # phantom 0.0 collapse
+    done = [_finished_req(i, float(i), True, "default") for i in range(6)]
+    done.append(_finished_req(99, 6.0, False, "batch"))
+    col.consume_finished(done, 7.0)
+    assert col.attainment_window() == 1.0
+    # once the sparse class reaches min_samples it re-enters the min
+    done += [_finished_req(100 + i, 8.0 + i, False, "batch")
+             for i in range(3)]
+    col.consume_finished(done, 12.0)
+    assert col.attainment_window() == 0.0
+    # and when NO class qualifies the whole signal is None
+    sparse = SignalCollector(classes, window=100.0, min_samples=4)
+    sparse.consume_finished(
+        [_finished_req(0, 0.0, True, "default"),
+         _finished_req(1, 0.0, False, "batch"),
+         _finished_req(2, 0.0, True, "default"),
+         _finished_req(3, 0.0, False, "batch")], 1.0)
+    assert sparse.attainment_window() is None
+
+
+def test_attainment_guard_single_class_unchanged():
+    """With one class the per-class guard degrades to exactly the old
+    global guard (the autoscale goldens depend on this)."""
+    single = SLOClassSet.single(SLO(ttft=1.0, tpot=0.1))
+    col = SignalCollector(single, window=100.0, min_samples=3)
+    done = [_finished_req(i, float(i), i != 0, "default")
+            for i in range(2)]
+    col.consume_finished(done, 3.0)
+    assert col.attainment_window() is None
+    done.append(_finished_req(5, 2.5, True, "default"))
+    col.consume_finished(done, 3.0)
+    assert col.attainment_window() == pytest.approx(2 / 3)
+
+
+# --------------------------------------------------------------------- #
+# satellite: composed fault storms (crash + preempt + slow + network)
+# --------------------------------------------------------------------- #
+STORM_SPEC = ("crash:mtbf=14;spot:mtbf=11,notice=1.5;"
+              "slow:t=5,factor=2.5,dur=8;"
+              "netdelay:60;netloss:{p:g};netdegrade:3:10")
+
+
+def _composed_storm(seed, p):
+    system = make_system("mooncake", _cost(), 4, SLO_SET,
+                         failure="migrate")
+    scen = make_scenario("bursty", "sharegpt", 5.0, seed=seed)
+    reqs = scen.generate(28.0)
+    engine = SimulationEngine(system)
+    spec = STORM_SPEC.format(p=p)
+    sched = make_fault_schedule(spec, seed=seed, duration=28.0)
+    inj = FaultInjector(sched, system).attach(engine)
+    engine.run(reqs, horizon=90.0)
+    return system, reqs, inj
+
+
+def _assert_storm_invariants(system, reqs, inj, baseline_registry):
+    # 1. no request is both finished and lost/failed, and finished means
+    #    complete
+    for r in reqs:
+        if r.state == RequestState.FINISHED:
+            assert r.tokens_generated == r.output_len, r.rid
+    failed = [r for r in reqs if r.state == RequestState.FAILED]
+    finished = {r.rid for r in reqs
+                if r.state == RequestState.FINISHED}
+    assert not finished & {r.rid for r in failed}
+    assert len(failed) == system.fault_stats["dropped"]
+    # 2. fault_stats is consistent with the injector's own log
+    s = inj.summary()
+    assert s["stats"] == system.fault_stats
+    applied = s["applied"]
+    assert applied.get("crash", 0) == system.fault_stats["crashes"]
+    assert applied.get("preempt", 0) == system.fault_stats["preemptions"]
+    assert s["n_skipped"] + sum(applied.values()) == s["n_scheduled"]
+    assert len(s["log"]) == s["n_scheduled"]
+    # 3. the actor registry stays bounded (dead instances unregistered)
+    assert registry_size() <= baseline_registry + len(system.instances)
+    # 4. no retry budget exceeded: request resubmits against the policy
+    #    budget, transport attempts against the config budget
+    for r in reqs:
+        assert r.retries <= 3
+    tr = system.transport
+    assert tr.network is not None       # the net clauses attached a plane
+    cap = TransportConfig().retries + 1
+    for e in tr.log:
+        assert 1 <= e["attempts"] <= cap, e
+    assert tr.stats["delivered"] + tr.stats["lost"] == tr.stats["sent"]
+    assert "transport" in s             # counters ride the summary
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           p=st.floats(min_value=0.0, max_value=0.25))
+    def test_composed_storm_invariants_property(seed, p):
+        baseline = registry_size()
+        system, reqs, inj = _composed_storm(seed, p)
+        _assert_storm_invariants(system, reqs, inj, baseline)
+
+
+def test_composed_storm_invariants_seeded():
+    rng = random.Random(4)
+    for _ in range(4):
+        seed = rng.randrange(2**31)
+        p = rng.uniform(0.0, 0.25)
+        baseline = registry_size()
+        system, reqs, inj = _composed_storm(seed, p)
+        _assert_storm_invariants(system, reqs, inj, baseline)

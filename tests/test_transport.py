@@ -1,0 +1,275 @@
+"""Unit layer for the transport/network plane (PR 7).
+
+The contract under test: with no ``NetworkModel`` attached the
+``Transport`` is *ideal* and byte-identical to the historic direct
+``engine.push(link.transfer(...), ...)`` path; with one attached, every
+loss draw / backoff jitter is a pure function of (schedule seed, message
+id, attempt), so two runs over the same seed produce identical transport
+logs no matter what else the heap interleaves.
+"""
+import heapq
+import itertools
+
+import pytest
+
+from repro.core.transport import (CTRL, POOL, CircuitBreaker, Transport,
+                                  TransportConfig)
+from repro.faults.network import NETWORK_KINDS, NetworkModel
+from repro.simulator.engine import Link
+
+
+class _Engine:
+    """Minimal deterministic event heap standing in for the simulation
+    engine (push / push_call / drain)."""
+
+    def __init__(self):
+        self.now = 0.0
+        self._heap = []
+        self._seq = itertools.count()
+
+    def push(self, t, fn):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, ()))
+
+    def push_call(self, t, fn, *args):
+        heapq.heappush(self._heap, (t, next(self._seq), fn, args))
+
+    def drain(self):
+        while self._heap:
+            t, _, fn, args = heapq.heappop(self._heap)
+            self.now = t
+            fn(*args)
+
+
+def _lossy(seed=7, p=1.0):
+    net = NetworkModel(seed)
+    if p > 0:
+        net.apply("netloss", p)
+    return net
+
+
+# --------------------------------------------------------------------- #
+# circuit breaker
+# --------------------------------------------------------------------- #
+def test_breaker_opens_on_threshold_and_half_opens_after_cooldown():
+    br = CircuitBreaker(threshold=3, cooldown=4.0)
+    assert br.allow(0.0)
+    assert not br.record_fail(0.0)
+    assert not br.record_fail(1.0)
+    assert br.record_fail(2.0)          # third consecutive failure opens
+    assert br.opens == 1
+    assert not br.allow(5.9)            # open for the cooldown
+    assert br.allow(6.0)                # half-open: next call probes
+    assert br.record_fail(6.0) is False  # counter restarted at open
+    br.record_ok()
+    assert br.fails == 0 and br.allow(6.0)
+
+
+def test_breaker_ok_resets_consecutive_count():
+    br = CircuitBreaker(threshold=2, cooldown=1.0)
+    br.record_fail(0.0)
+    br.record_ok()
+    assert not br.record_fail(0.5)      # streak restarted, not cumulative
+    assert br.record_fail(0.6)
+
+
+# --------------------------------------------------------------------- #
+# ideal path: bit-identical to the pre-transport wiring
+# --------------------------------------------------------------------- #
+def test_clean_transfer_matches_direct_link_push():
+    link_a = Link("nic", bandwidth=1e9, latency=2e-3)
+    link_b = Link("nic", bandwidth=1e9, latency=2e-3)
+    eng = _Engine()
+    tr = Transport()
+    got = []
+    for i, nb in enumerate([1e6, 5e5, 2e6]):
+        tr.transfer(eng, 0, 1, nb, 0.1 * i,
+                    deliver=lambda: got.append(eng.now),
+                    on_lost=lambda: got.append(None), link=link_a)
+    eng.drain()
+    want = [link_b.transfer(nb, 0.1 * i)
+            for i, nb in enumerate([1e6, 5e5, 2e6])]
+    assert got == want
+    # the ideal path keeps zero accounting: no network, no message ids
+    assert tr.summary()["sent"] == 0 and tr.log == []
+
+
+def test_clean_plane_is_free_for_rpc_snapshot_and_reachability():
+    tr = Transport()
+    assert tr.try_rpc(1.0, CTRL, 3) is True
+    assert tr.snapshot_channel(1.0) == ("ok", 0.0)
+    insts = [object(), object()]
+    assert tr.filter_reachable(insts, 1.0) is insts   # same list object
+    assert tr.instance_reachable(99, 0.0)
+    assert all(v == 0 for v in tr.summary().values())
+
+
+# --------------------------------------------------------------------- #
+# degraded path: timeout/retry/backoff + loss accounting
+# --------------------------------------------------------------------- #
+def test_total_loss_exhausts_retry_budget_then_reports_lost():
+    cfg = TransportConfig(retries=3)
+    tr = Transport(cfg)
+    tr.attach_network(_lossy(p=1.0))
+    eng = _Engine()
+    link = Link("nic", bandwidth=1e9, latency=1e-3)
+    fate = []
+    tr.transfer(eng, 0, 1, 1e6, 0.0, deliver=lambda: fate.append("ok"),
+                on_lost=lambda: fate.append("lost"), link=link)
+    eng.drain()
+    assert fate == ["lost"]             # on_lost exactly once, no deliver
+    s = tr.summary()
+    assert s["sent"] == 1 and s["lost"] == 1 and s["delivered"] == 0
+    assert s["retries"] == cfg.retries
+    assert s["timeouts"] <= cfg.retries + 1
+    (entry,) = [e for e in tr.log if e["outcome"] == "lost"]
+    assert entry["attempts"] <= cfg.retries + 1
+    # each in-flight loss is noticed only at the per-call timeout
+    nominal = link.latency + 1e6 / link.bandwidth
+    timeout = max(cfg.min_timeout, cfg.timeout_factor * nominal)
+    assert entry["t1"] >= entry["t0"] + timeout
+
+
+def test_degraded_delivery_applies_degrade_factor_and_extra_latency():
+    net = NetworkModel(3)
+    net.apply("netdegrade", 4.0)
+    net.apply("netdelay", 0.25)
+    tr = Transport()
+    tr.attach_network(net)
+    eng = _Engine()
+    link = Link("nic", bandwidth=1e9, latency=1e-3)
+    got = []
+    tr.transfer(eng, 0, 1, 1e6, 0.0, deliver=lambda: got.append(eng.now),
+                on_lost=lambda: got.append(None), link=link)
+    eng.drain()
+    want = Link("nic", 1e9, 1e-3).transfer(
+        1e6, 0.0, factor=4.0, extra_latency=0.25)
+    assert got == [want]
+    assert tr.summary()["delivered"] == 1
+
+
+def test_transport_log_is_bit_identical_across_identical_runs():
+    def one_run():
+        tr = Transport(TransportConfig(retries=2))
+        tr.attach_network(_lossy(seed=1234, p=0.5))
+        eng = _Engine()
+        link = Link("nic", bandwidth=1e8, latency=1e-3)
+        for i in range(40):
+            tr.transfer(eng, i % 3, (i + 1) % 3, 1e5 * (1 + i % 7),
+                        0.05 * i, deliver=lambda: None,
+                        on_lost=lambda: None, link=link)
+        eng.drain()
+        return tr.log, tr.summary()
+    a_log, a_sum = one_run()
+    b_log, b_sum = one_run()
+    assert a_log == b_log
+    assert a_sum == b_sum
+    assert a_sum["delivered"] + a_sum["lost"] == a_sum["sent"] == 40
+
+
+def test_partitioned_endpoint_drops_messages_and_reads_unreachable():
+    net = NetworkModel(5)
+    tr = Transport(TransportConfig(retries=0))
+    tr.attach_network(net)
+    net.begin_partition(2)
+    assert not tr.instance_reachable(2, 0.0)
+    assert tr.instance_reachable(1, 0.0)
+    eng = _Engine()
+    fate = []
+    tr.transfer(eng, 0, 2, 1e5, 0.0, deliver=lambda: fate.append("ok"),
+                on_lost=lambda: fate.append("lost"),
+                link=Link("nic", 1e9))
+    eng.drain()
+    assert fate == ["lost"]
+    assert tr.try_rpc(0.0, CTRL, 2) is False
+    net.end_partition(2)
+    assert tr.instance_reachable(2, 100.0)
+    assert tr.try_rpc(100.0, CTRL, 2) is True
+
+
+def test_breaker_marks_destination_unreachable_until_cooldown():
+    cfg = TransportConfig(retries=0, breaker_threshold=2,
+                          breaker_cooldown=4.0)
+    tr = Transport(cfg)
+    tr.attach_network(_lossy(p=1.0))
+    eng = _Engine()
+    link = Link("nic", bandwidth=1e9, latency=1e-3)
+    for i in range(3):
+        tr.transfer(eng, 0, 1, 1e5, float(i), deliver=lambda: None,
+                    on_lost=lambda: None, link=link)
+    eng.drain()
+    s = tr.summary()
+    assert s["breaker_opens"] >= 1
+    t_open = tr._dst_open[1]
+    assert not tr.instance_reachable(1, t_open - 1e-9)
+    assert tr.instance_reachable(1, t_open)
+    # fast-fail path was exercised for sends into the open circuit
+    assert s["breaker_fastfails"] >= 1
+
+
+def test_rpc_retry_budget_and_accounting():
+    tr = Transport(TransportConfig(retries=2))
+    tr.attach_network(_lossy(seed=99, p=1.0))
+    assert tr.try_rpc(0.0, CTRL, 1) is False
+    s = tr.summary()
+    assert s["rpc_calls"] == 1 and s["rpc_failures"] == 1
+    assert s["rpc_retries"] == 2        # never exceeds the budget
+    ok = Transport(TransportConfig(retries=2))
+    ok.attach_network(_lossy(seed=99, p=0.0))
+    assert ok.try_rpc(0.0, CTRL, 1) is True
+    assert ok.summary()["rpc_retries"] == 0
+
+
+def test_snapshot_channel_fates():
+    delayed = NetworkModel(11)
+    delayed.apply("netdelay", 0.3)
+    tr = Transport()
+    tr.attach_network(delayed)
+    fate, d = tr.snapshot_channel(2.0)
+    assert fate == "delay" and d == pytest.approx(0.3)
+    assert tr.summary()["snapshots_delayed"] == 1
+    tr2 = Transport()
+    tr2.attach_network(_lossy(p=1.0))
+    assert tr2.snapshot_channel(2.0) == ("drop", 0.0)
+    assert tr2.summary()["snapshots_dropped"] == 1
+
+
+# --------------------------------------------------------------------- #
+# the network model itself
+# --------------------------------------------------------------------- #
+def test_network_model_composes_and_reverts_episodes():
+    net = NetworkModel(1)
+    net.apply("netdelay", 0.1)
+    net.apply("netdelay", 0.2)
+    assert net.delay() == pytest.approx(0.3)
+    net.apply("netdegrade", 2.0)
+    net.apply("netdegrade", 3.0)
+    assert net.degrade() == pytest.approx(6.0)
+    net.apply("netloss", 0.5)
+    net.apply("netloss", 0.5)
+    assert net.loss() == pytest.approx(0.75)   # 1 - (1-p)^2
+    net.revert("netdelay", 0.2)
+    net.revert("netdegrade", 3.0)
+    net.revert("netloss", 0.5)
+    assert net.delay() == pytest.approx(0.1)
+    assert net.degrade() == pytest.approx(2.0)
+    assert net.loss() == pytest.approx(0.5)
+    with pytest.raises(KeyError):
+        net.apply("crash", 1.0)
+
+
+def test_network_draws_are_seeded_pure_functions():
+    a, b = NetworkModel(42), NetworkModel(42)
+    keys = [("loss", m, k) for m in range(20) for k in range(3)]
+    va = [a.draw(*key) for key in keys]
+    vb = [b.draw(*key) for key in keys]
+    assert va == vb
+    assert all(0.0 <= v < 1.0 for v in va)
+    assert len(set(va)) > 30            # not degenerate
+    c = NetworkModel(43)
+    assert [c.draw(*k) for k in keys] != va
+
+
+def test_network_kinds_cover_the_grammar():
+    assert set(NETWORK_KINDS) == {
+        "netdelay", "netloss", "netdegrade", "partition"}
+    assert POOL != CTRL and POOL < 0 and CTRL < 0
