@@ -85,6 +85,7 @@ class Instance:
                  kv_capacity_tokens: int,
                  max_prefill_tokens: int = 16_384,
                  max_decode_batch: int = 256,
+                 max_prefill_batch: Optional[int] = None,
                  slo_tpot: Optional[float] = None,
                  slo_ttft: Optional[float] = None,
                  conservative_slack: bool = False,
@@ -95,6 +96,12 @@ class Instance:
         self.kv_capacity_tokens = kv_capacity_tokens
         self.max_prefill_tokens = max_prefill_tokens
         self.max_decode_batch = max_decode_batch
+        # Slot-coupled prefill cap (real-exec engines): each prefilled
+        # request lands in one of ``max_prefill_batch`` physical decode
+        # slots, so a prefill batch may take at most
+        # ``max_prefill_batch - len(decoding)`` requests.  None (default)
+        # keeps the simulator's token-bounded-only plan, bit-identically.
+        self.max_prefill_batch = max_prefill_batch
         # PaDG intra-instance rule (§3.1): with a TPOT SLO known, the
         # instance keeps decoding until its decodes have accumulated
         # enough slack to absorb the pending prefill slot.  None disables
@@ -323,7 +330,13 @@ class Instance:
         batch: List[Request] = []
         lens: List[int] = []
         tokens = 0
+        # physical decode slots still free (None = unconstrained; the
+        # plan may then legitimately be empty when every slot is decoding)
+        limit = None if self.max_prefill_batch is None else max(
+            0, self.max_prefill_batch - len(self.decoding))
         for r in self.pending:
+            if limit is not None and len(batch) >= limit:
+                break
             remaining = r.prompt_len - self._chunk_progress.get(r.rid, 0)
             if batch and tokens + remaining > self.max_prefill_tokens:
                 break
@@ -346,10 +359,13 @@ class Instance:
         """
         if self.pending and self._slack_allows_prefill(now):
             batch, _, dur, _ = self._prefill_plan()
-            if self.phase != "prefill":
-                self.phase = "prefill"
-                self.last_switch_time = now
-            return "prefill", dur, batch
+            # an empty plan (every physical slot busy decoding under
+            # ``max_prefill_batch``) falls through to a decode iteration
+            if batch:
+                if self.phase != "prefill":
+                    self.phase = "prefill"
+                    self.last_switch_time = now
+                return "prefill", dur, batch
         if self.decoding:
             batch = self.decoding[: self.max_decode_batch]
             if self.pending and self.chunked_fallback:

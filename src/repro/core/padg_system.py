@@ -31,7 +31,7 @@ class EcoServeSystem(PolicySystemBase):
                  plus_plus: bool = False,
                  chunked_fallback: int = 0,
                  queue_discipline=None, admission=None, routing=None,
-                 failure=None):
+                 failure=None, instance_kwargs=None):
         """``slo`` is a bare ``SLO`` or a multi-tenant ``SLOClassSet``;
         with a class set, admission/routing/slack all run against each
         request's own class budgets (single-class sets are bit-identical
@@ -49,6 +49,10 @@ class EcoServeSystem(PolicySystemBase):
         self.n_lower = n_lower
         self.n_upper = n_upper
         self.queue_timeout_factor = queue_timeout_factor
+        # extra Instance(...) kwargs (e.g. max_decode_batch /
+        # max_prefill_batch for engine-backed conformance runs); must be
+        # set before super().__init__ because _build() runs inside it
+        self.instance_kwargs = dict(instance_kwargs or {})
         if admission is None:
             admission = TimeoutForcedAdmission(queue_timeout_factor)
         super().__init__(cost, n_instances, slo,
@@ -72,6 +76,6 @@ class EcoServeSystem(PolicySystemBase):
             slo_tpot=self.slo.tpot, slo_ttft=self.slo.ttft,
             conservative_slack=self.plus_plus,
             chunked_fallback=self.chunked_fallback,
-            slo_classes=self.slo_set)
+            slo_classes=self.slo_set, **self.instance_kwargs)
         register_instance(inst)
         return inst

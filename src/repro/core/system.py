@@ -86,6 +86,14 @@ class PolicySystemBase:
     default_routing = "least-kv"
     default_failure = "drop"
 
+    # Optional scheduling-decision trace (sim-to-real conformance): when a
+    # caller attaches a list here, every admission outcome is appended as
+    # ("admit"|"queue"|"drain", now, rid[, iid]).  The engines log slot
+    # events into the same list, so one sequence totally orders the
+    # scheduling decisions a run makes.  None (the default) keeps the hot
+    # path allocation-free.
+    decision_log: Optional[List] = None
+
     def __init__(self, cost, n_instances: int, slo=None, *,
                  queue_discipline=None, admission=None, routing=None,
                  failure=None):
@@ -146,6 +154,10 @@ class PolicySystemBase:
     # ---------------- engine hooks --------------------------------------- #
     def submit(self, req: Request, now: float, engine) -> None:
         inst = self.admission.try_admit(self, req, now)
+        if self.decision_log is not None:
+            self.decision_log.append(
+                ("admit", now, req.rid, inst.iid) if inst is not None
+                else ("queue", now, req.rid))
         if inst is not None:
             engine.activate(inst)
         else:
@@ -189,6 +201,9 @@ class PolicySystemBase:
             tries += 1
             inst = self.admission.try_admit(self, req, now)
             if inst is not None:
+                if self.decision_log is not None:
+                    self.decision_log.append(
+                        ("drain", now, req.rid, inst.iid))
                 engine.activate(inst)
                 admitted.add(id(req))
                 fails = 0

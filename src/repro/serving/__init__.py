@@ -1,1 +1,15 @@
-from repro.serving.engine import ServingEngine, EngineConfig  # noqa: F401
+"""Real-execution serving stack.
+
+Lazy attribute access: ``repro.serving.calibration`` /
+``repro.serving.replay`` are numpy-only and are imported by simulator
+worker processes (the runner's calibrated-executor axis), so this
+package must not eagerly pull the jax-backed engine.
+"""
+_ENGINE_EXPORTS = {"ServingEngine", "EngineConfig", "MeasuredExecutor"}
+
+
+def __getattr__(name):
+    if name in _ENGINE_EXPORTS:
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")

@@ -45,11 +45,13 @@ class EcoServeAPI:
                                 prompt_len=len(ids),
                                 output_len=max_new_tokens,
                                 prompt_tokens=ids))
-        stats = self.server.serve(reqs)
-        done = {r.rid: r for r in stats.finished}
+        self.server.serve(reqs)
+        # the local reqs carry the generated tokens and timings directly
+        # (keying stats.finished by rid would collide across generate()
+        # calls, which all number their requests from 0)
         out = []
         for i, p in enumerate(prompts):
-            r = done[i]
+            r = reqs[i]
             if stream:
                 for t in r.generated:
                     stream(i, t)
@@ -60,3 +62,13 @@ class EcoServeAPI:
                 ttft_s=r.ttft or 0.0,
                 avg_tpot_s=r.avg_tpot))
         return out
+
+    def close(self) -> None:
+        """Release the server's actor-registry entries."""
+        self.server.shutdown()
+
+    def __enter__(self) -> "EcoServeAPI":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

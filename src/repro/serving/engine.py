@@ -34,25 +34,75 @@ class EngineConfig:
 
 
 class MeasuredExecutor:
-    """ExecutorModel backed by observed wall-clock times (EWMA), used by
-    the scheduling Instance attached to a real engine."""
+    """ExecutorModel backed by observed wall-clock times, used by the
+    scheduling Instance attached to a real engine.
 
-    def __init__(self, fallback_prefill=2e-4, fallback_decode=5e-2):
-        self._prefill_per_tok = fallback_prefill
-        self._decode = fallback_decode
+    Shape-aware: predictions follow the same linear forms as
+    ``simulator.cost_model`` (prefill base + per-token; decode per-slot
+    base + ctx-sum term), with the constants seeded by probing a cost
+    model (``seed_model``) and a single EWMA *gain* per op tracking the
+    observed/predicted ratio — so a slot with twice the batch really is
+    predicted to take longer, and the first prediction before any
+    observation is the model's estimate rather than a magic number.
+    """
+
+    # no sliding-window clamp on the real engine's slotted KV: advertise
+    # the Instance ctx_sum fast path with an unbounded clamp
+    ctx_clamp = 0
+
+    def __init__(self, seed_model=None,
+                 fallback_prefill=2e-4, fallback_decode=5e-2):
+        if seed_model is not None:
+            p1 = seed_model.prefill_time([1])
+            p257 = seed_model.prefill_time([257])
+            self._prefill_per_tok = max((p257 - p1) / 256.0, 1e-12)
+            self._prefill_base = max(p1 - self._prefill_per_tok, 0.0)
+            d10 = seed_model.decode_time(1, [0])
+            d20 = seed_model.decode_time(2, [0, 0])
+            d1k = seed_model.decode_time(1, [1024])
+            self._decode_per_seq = max(d20 - d10, 0.0)
+            self._decode_per_ctx = max((d1k - d10) / 1024.0, 0.0)
+            self._decode_base = max(d10 - self._decode_per_seq, 0.0)
+        else:
+            # legacy flat fallbacks (no model to probe)
+            self._prefill_per_tok = fallback_prefill
+            self._prefill_base = 0.0
+            self._decode_per_seq = fallback_decode
+            self._decode_per_ctx = 0.0
+            self._decode_base = 0.0
+        self._prefill_gain = 1.0
+        self._decode_gain = 1.0
 
     def observe_prefill(self, tokens: int, dt: float) -> None:
-        per = dt / max(1, tokens)
-        self._prefill_per_tok = 0.7 * self._prefill_per_tok + 0.3 * per
+        pred = self._prefill_base + self._prefill_per_tok * max(1, tokens)
+        if pred > 0:
+            self._prefill_gain = (0.7 * self._prefill_gain
+                                  + 0.3 * dt / pred)
 
-    def observe_decode(self, dt: float) -> None:
-        self._decode = 0.7 * self._decode + 0.3 * dt
+    def observe_decode(self, dt: float, batch: int = 1,
+                       ctx_sum: int = 0) -> None:
+        pred = (self._decode_base + self._decode_per_seq * max(1, batch)
+                + self._decode_per_ctx * ctx_sum)
+        if pred > 0:
+            self._decode_gain = 0.7 * self._decode_gain + 0.3 * dt / pred
 
-    def prefill_time(self, lens: List[int]) -> float:
-        return self._prefill_per_tok * sum(lens)
+    def prefill_time(self, lens: List[int],
+                     kv_prefix_lens: Optional[List[int]] = None) -> float:
+        if not lens:
+            return 0.0
+        tokens = sum(lens) + (sum(kv_prefix_lens) if kv_prefix_lens else 0)
+        return self._prefill_gain * (self._prefill_base
+                                     + self._prefill_per_tok * tokens)
 
-    def decode_time(self, batch: int, ctxs: List[int]) -> float:
-        return self._decode
+    def decode_time(self, batch: int, ctx_lens: Optional[List[int]] = None,
+                    *, ctx_sum: Optional[int] = None) -> float:
+        if batch == 0:
+            return 0.0
+        if ctx_sum is None:
+            ctx_sum = sum(ctx_lens) if ctx_lens else 0
+        return self._decode_gain * (self._decode_base
+                                    + self._decode_per_seq * batch
+                                    + self._decode_per_ctx * ctx_sum)
 
 
 class ServingEngine:
@@ -60,7 +110,8 @@ class ServingEngine:
     recompilation as requests come and go)."""
 
     def __init__(self, cfg: ModelConfig, params=None, seed: int = 0,
-                 econf: EngineConfig = EngineConfig()):
+                 econf: EngineConfig = EngineConfig(),
+                 cost_model=None, recorder=None):
         assert not cfg.is_encoder, "decode engine serves decoder models"
         self.cfg = cfg
         self.econf = econf
@@ -71,7 +122,12 @@ class ServingEngine:
         self.tokens = jnp.zeros((B, 1), jnp.int32)
         self.lengths = np.zeros(B, np.int32)          # context per slot
         self.slot_req: List[Optional[Request]] = [None] * B
-        self.executor = MeasuredExecutor()
+        if cost_model is None:
+            from repro.simulator.cost_model import (InstanceCostModel,
+                                                    TPU_V5E_SIM)
+            cost_model = InstanceCostModel(cfg=cfg, hw=TPU_V5E_SIM)
+        self.executor = MeasuredExecutor(seed_model=cost_model)
+        self.recorder = recorder      # optional CalibrationRecorder
 
         self._prefill_fn = jax.jit(self._prefill_impl)
         self._decode_fn = jax.jit(self._decode_impl, donate_argnums=(1,))
@@ -106,6 +162,8 @@ class ServingEngine:
         self.cache = _merge_slot(self.cfg, self.cache, pcache, slot)
         dt = time.perf_counter() - t0
         self.executor.observe_prefill(len(prompt), dt)
+        if self.recorder is not None:
+            self.recorder.record_prefill(len(prompt), dt)
 
         self.lengths[slot] = len(prompt)
         self.slot_req[slot] = req
@@ -125,7 +183,11 @@ class ServingEngine:
             self.params, self.cache, self.tokens, lengths)
         new_tokens = np.asarray(jnp.argmax(logits, axis=-1))
         dt = time.perf_counter() - t0
-        self.executor.observe_decode(dt)
+        ctx_sum = int(sum(self.lengths[i] for i in occupied))
+        self.executor.observe_decode(dt, batch=len(occupied),
+                                     ctx_sum=ctx_sum)
+        if self.recorder is not None:
+            self.recorder.record_decode(len(occupied), ctx_sum, dt)
 
         out: Dict[int, int] = {}
         for i in occupied:
@@ -142,6 +204,15 @@ class ServingEngine:
                 self.slot_req[i] = None
                 self.lengths[i] = 0
         return out
+
+    def release(self, req: Request) -> None:
+        """Free the slot holding ``req`` (scheduler-side early finish,
+        e.g. a one-token request done at prefill)."""
+        for i, r in enumerate(self.slot_req):
+            if r is req:
+                self.slot_req[i] = None
+                self.lengths[i] = 0
+                return
 
 
 def _merge_slot(cfg, big_cache, pcache, slot: int):

@@ -1,155 +1,197 @@
-"""PaDG server: real-execution EcoServe over N ServingEngine instances.
+"""PaDG server: real-execution EcoServe over N engine-backed instances.
 
-Single-process cooperative loop (wall-clock): arrivals are admitted via
-the macro-instance scheduler (Algorithm 1 + constraint check), instances
-run temporal-disaggregated slots — a prefill burst when the scheduler
-routed work to them, decode iterations otherwise.  This is the same
-scheduling stack as the simulator, driven by measured durations.
+The server IS the simulator's scheduling stack: requests flow through an
+``EcoServeSystem`` (Algorithm 1 routing over macro instances, Algorithm 2
+admission constraints, timeout-forced queueing) driven by a
+``repro.serving.replay.ReplayEngine`` — a ``SimulationEngine`` whose slot
+completions additionally execute on each instance's attached engine
+backend (the jax ``ServingEngine`` or the deterministic ``FakeEngine``)
+and whose timeline can follow a wall clock.  Because both stacks run the
+identical admission/routing/slot code, the sim-to-real conformance suite
+can assert decision-for-decision equality between a simulated run and a
+served run of the same trace.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional
 
 from repro.configs.base import ModelConfig
 from repro.core.instance import Instance
-from repro.core.macro import MacroInstance
-from repro.core.mitosis import register_instance
+from repro.core.mitosis import register_instance, unregister_instance
+from repro.core.padg_system import EcoServeSystem
 from repro.core.request import Request, RequestState
 from repro.core.slo import SLO
-from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.replay import (FakeEngine, RealEngineBackend,
+                                  ReplayEngine, WallClock)
 
 
 @dataclasses.dataclass
 class ServeStats:
     finished: List[Request]
+    rejected: List[Request] = dataclasses.field(default_factory=list)
+    # scheduling-decision trace (serve(record_decisions=True)); None when
+    # not recorded
+    decisions: Optional[list] = None
 
     def summary(self) -> Dict[str, float]:
+        """Latency summary; always emits the full key set (zeros when no
+        request finished) so JSONL rows keep a stable schema."""
         import numpy as np
         done = self.finished
-        if not done:
-            return {"finished": 0}
-        ttft = np.array([r.ttft for r in done])
+        ttft = np.array([r.ttft for r in done
+                         if r.ttft is not None]) if done else np.array([])
         tpots = [r.avg_tpot for r in done if r.avg_tpot is not None]
         return {
             "finished": len(done),
-            "ttft_p50": float(np.percentile(ttft, 50)),
-            "ttft_p90": float(np.percentile(ttft, 90)),
+            "rejected": len(self.rejected),
+            "ttft_p50": float(np.percentile(ttft, 50)) if len(ttft) else 0.0,
+            "ttft_p90": float(np.percentile(ttft, 90)) if len(ttft) else 0.0,
             "tpot_p50": float(np.percentile(tpots, 50)) if tpots else 0.0,
             "tokens": int(sum(r.tokens_generated for r in done)),
         }
 
 
-class RealInstance(Instance):
-    """Scheduling instance bound to a real engine."""
+class _SchedulerModel:
+    """Cost-model facade the scheduling system sees: prefill predictions
+    come from the live executor (measured or analytic), capacity from the
+    engine's slotted KV geometry."""
 
-    def __init__(self, iid: int, engine: ServingEngine, slo: SLO):
-        super().__init__(
-            iid, engine.executor,
-            kv_capacity_tokens=engine.econf.max_batch
-            * engine.econf.max_seq_len,
-            max_decode_batch=engine.econf.max_batch,
-            slo_tpot=slo.tpot, slo_ttft=slo.ttft)
-        self.engine = engine
+    def __init__(self, executor, kv_capacity: int):
+        self.executor = executor
+        self._kv_capacity = kv_capacity
+
+    def predict_prefill(self, prompt_len: int) -> float:
+        if hasattr(self.executor, "predict_prefill"):
+            return self.executor.predict_prefill(prompt_len)
+        return self.executor.prefill_time([prompt_len])
+
+    def kv_capacity_tokens(self) -> int:
+        return self._kv_capacity
+
+
+class RealEcoServeSystem(EcoServeSystem):
+    """EcoServeSystem whose instances carry engine backends and the
+    engine's physical slot geometry (``max_decode_batch`` /
+    ``max_prefill_batch`` = the engine's slot count)."""
+
+    def __init__(self, executors, engines, econf, slo, scheduler_model,
+                 **kw):
+        # consumed by _make_instance, which runs inside super().__init__
+        self._executors = executors
+        self._engines = engines
+        self._econf = econf
+        super().__init__(scheduler_model, len(engines), slo, **kw)
+
+    def _make_instance(self, iid: int) -> Instance:
+        econf = self._econf
+        inst = Instance(
+            iid, self._executors[iid],
+            kv_capacity_tokens=econf.max_batch * econf.max_seq_len,
+            max_decode_batch=econf.max_batch,
+            max_prefill_batch=econf.max_batch,
+            slo_tpot=self.slo.tpot, slo_ttft=self.slo.ttft,
+            slo_classes=self.slo_set)
+        inst.engine = self._engines[iid]
+        register_instance(inst)
+        return inst
 
 
 class PaDGServer:
-    def __init__(self, cfg: ModelConfig, n_instances: int, slo: SLO,
-                 econf: EngineConfig = EngineConfig(), seed: int = 0):
+    """Real-execution EcoServe server.
+
+    ``backend="real"`` builds one jax ``ServingEngine`` per instance
+    (tiny CPU configs by default); ``backend="fake"`` uses the
+    deterministic ``FakeEngine`` (requires an explicit ``executor`` model
+    — there is nothing to measure) for conformance tests and synthetic
+    calibration runs.
+    """
+
+    def __init__(self, cfg: Optional[ModelConfig], n_instances: int,
+                 slo: SLO, econf=None, seed: int = 0,
+                 backend: str = "real", executor=None, recorder=None,
+                 true_model=None):
+        if econf is None:
+            # imported lazily: the fake backend (conformance tests,
+            # synthetic calibration) must not pull jax
+            from repro.serving.engine import EngineConfig
+            econf = EngineConfig()
+        self.econf = econf
         self.slo = slo
-        self.instances: List[RealInstance] = []
+        self._shutdown = False
+        engines, executors = [], []
         for i in range(n_instances):
-            eng = ServingEngine(cfg, seed=seed, econf=econf)
-            inst = RealInstance(i, eng, slo)
-            register_instance(inst)
-            self.instances.append(inst)
-        self.macro = MacroInstance(
-            0, self.instances, slo,
-            predict_prefill=lambda n: self.instances[0].executor
-            .prefill_time([n]))
+            if backend == "real":
+                from repro.serving.engine import ServingEngine
+                eng = ServingEngine(cfg, seed=seed, econf=econf,
+                                    recorder=recorder)
+                engines.append(RealEngineBackend(eng))
+                executors.append(executor if executor is not None
+                                 else eng.executor)
+            elif backend == "fake":
+                if executor is None:
+                    raise ValueError(
+                        "backend='fake' needs an explicit executor model")
+                engines.append(FakeEngine(econf, true_model=true_model,
+                                          recorder=recorder))
+                executors.append(executor)
+            else:
+                raise ValueError(f"unknown backend {backend!r}")
+        model = _SchedulerModel(executors[0],
+                                econf.max_batch * econf.max_seq_len)
+        self.system = RealEcoServeSystem(executors, engines, econf, slo,
+                                         model)
         self.finished: List[Request] = []
 
-    # --------------------------------------------------------------- #
-    def serve(self, requests: List[Request],
-              time_scale: float = 1.0) -> ServeStats:
-        """Serve a request trace (arrival_time in seconds, scaled by
-        ``time_scale``).  Returns per-request latency stats."""
-        self._t0 = time.perf_counter()
-        self._scale = time_scale
-        pending = sorted(requests, key=lambda r: r.arrival_time)
-        queue: List[Request] = []
-
-        def now() -> float:
-            return (time.perf_counter() - self._t0) / time_scale
-
-        while pending or queue or any(
-                i.pending or i.decoding for i in self.instances):
-            t = now()
-            # 1. admit due arrivals through Algorithm 1
-            while pending and pending[0].arrival_time <= t:
-                queue.append(pending.pop(0))
-            still = []
-            for req in queue:
-                inst = self.macro.route(req, t)
-                if inst is None:
-                    if t - req.arrival_time > 4 * self.slo.ttft:
-                        self.macro.route_forced(req, t)
-                    else:
-                        still.append(req)
-            queue = still
-
-            # 2. each instance runs one slot of its current phase
-            progressed = False
-            for inst in self.instances:
-                progressed |= self._step_instance(inst)
-            if not progressed and not queue:
-                if pending:
-                    wait = max(0.0, pending[0].arrival_time - now())
-                    time.sleep(min(wait, 0.01) * time_scale)
-                else:
-                    time.sleep(0.001)
-        return ServeStats(self.finished)
+    @property
+    def instances(self) -> List[Instance]:
+        return self.system.instances
 
     # --------------------------------------------------------------- #
-    def _step_instance(self, inst: RealInstance) -> bool:
-        eng = inst.engine
-        if inst.pending and eng.free_slots() and \
-                inst._slack_allows_prefill(self._now(inst)):
-            req = inst.pending[0]
-            inst.remove_pending(req)
-            inst.phase = "prefill"
-            eng.prefill(req)
-            req.state = RequestState.DECODING
-            req.first_token_time = self._now(inst)
-            req.tokens_generated = 1
-            if req.tokens_generated >= req.output_len:
-                self._finish(inst, req)
+    def serve(self, requests: List[Request], time_scale: float = 1.0,
+              clock=None, record_decisions: bool = False,
+              horizon: float = float("inf")) -> ServeStats:
+        """Serve a request trace.  ``time_scale`` > 1 stretches trace
+        time on the default wall clock; pass a ``VirtualClock`` for a
+        deterministic (conformance) replay."""
+        usable = self.econf.max_seq_len - 2
+        accepted, rejected = [], []
+        for r in requests:
+            if r.prompt_len > usable or r.prompt_len <= 0:
+                r.state = RequestState.FAILED
+                rejected.append(r)
             else:
-                inst.add_decoding(req)
-            return True
-        if inst.decoding:
-            inst.phase = "decode"
-            eng.decode_step()
-            tnow = self._now(inst)
-            for req in list(inst.decoding):
-                inst.sync_tokens(req, len(req.generated))
-                if req.tokens_generated == 2:
-                    req.second_token_time = tnow
-                still_running = any(r is req for r in eng.slot_req)
-                if not still_running:
-                    inst.remove_decoding(req)
-                    self._finish(inst, req)
-            return True
-        inst.phase = "idle"
-        return False
+                accepted.append(r)
 
-    def _finish(self, inst: RealInstance, req: Request) -> None:
-        req.state = RequestState.FINISHED
-        req.finish_time = self._now(inst)
-        self.finished.append(req)
+        if clock is None:
+            clock = WallClock(time_scale)
+        engine = ReplayEngine(self.system, clock=clock)
+        log: Optional[list] = [] if record_decisions else None
+        if record_decisions:
+            engine.decision_log = log
+            self.system.decision_log = log
+        try:
+            finished = engine.run(accepted, horizon=horizon)
+        finally:
+            if record_decisions:
+                engine.decision_log = None
+                self.system.decision_log = None
+        self.finished.extend(finished)
+        return ServeStats(list(finished), rejected=rejected, decisions=log)
 
-    def _now(self, inst=None) -> float:
-        if not hasattr(self, "_t0"):
-            return 0.0
-        return (time.perf_counter() - self._t0) / self._scale
+    # --------------------------------------------------------------- #
+    def shutdown(self) -> None:
+        """Release the actor-registry entries taken in ``__init__`` (the
+        mitosis registry is process-global; leaking entries across
+        servers corrupts later registry-size accounting)."""
+        if self._shutdown:
+            return
+        self._shutdown = True
+        for inst in self.system.instances:
+            unregister_instance(inst)
+
+    def __enter__(self) -> "PaDGServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

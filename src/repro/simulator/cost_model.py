@@ -252,3 +252,99 @@ class InstanceCostModel:
             t = self.prefill_time([prompt_len])
             memo[prompt_len] = t
         return t
+
+
+# Serialized field order of ``FittedExecutor`` — module-level (a tuple
+# class attribute on a frozen dataclass would become a field).
+FITTED_CONSTANT_FIELDS = (
+    "prefill_base", "prefill_per_token", "decode_base",
+    "decode_per_seq", "decode_per_ctx_token",
+    "kv_capacity", "kv_bytes_per_token", "ctx_clamp")
+
+
+@dataclasses.dataclass(frozen=True)
+class FittedExecutor:
+    """Linear cost model with *measured* constants (sim-to-real write-back).
+
+    Implements the full ``InstanceCostModel`` surface the scheduling stack
+    uses — ``prefill_time``/``decode_time``/``hybrid_time``/
+    ``predict_prefill``/``kv_capacity_tokens``/``kv_transfer_bytes``/
+    ``ctx_clamp`` — but with flat per-token linear forms whose constants
+    come from ``repro.serving.calibration`` least-squares fits of live
+    engine step timings, so simulator cells can replay with measured
+    throughput instead of roofline estimates.  ``predict_prefill(n)`` is
+    arithmetically identical to ``prefill_time([n])`` (no memo needed:
+    both are one multiply-add), which the conformance suite relies on.
+    """
+    prefill_base: float = 0.0
+    prefill_per_token: float = 1e-4
+    decode_base: float = 0.0
+    decode_per_seq: float = 1e-4
+    decode_per_ctx_token: float = 0.0
+    kv_capacity: int = 10_000_000
+    kv_bytes_per_token: int = 0
+    ctx_clamp: int = 0
+
+    # ------------------------------------------------------------------ #
+    def prefill_time(self, prompt_lens: List[int],
+                     kv_prefix_lens: Optional[List[int]] = None) -> float:
+        if not prompt_lens:
+            return 0.0
+        tokens = sum(prompt_lens)
+        if kv_prefix_lens:
+            tokens += sum(kv_prefix_lens)
+        return self.prefill_base + self.prefill_per_token * tokens
+
+    def predict_prefill(self, prompt_len: int) -> float:
+        return self.prefill_base + self.prefill_per_token * prompt_len
+
+    def decode_time(self, batch_size: int,
+                    ctx_lens: Optional[List[int]] = None,
+                    *, ctx_sum: Optional[int] = None) -> float:
+        if batch_size == 0:
+            return 0.0
+        if ctx_sum is None:
+            ctx_sum = InstanceCostModel._eff_ctx_sum(
+                ctx_lens or [], self.ctx_clamp)
+        return (self.decode_base + self.decode_per_seq * batch_size
+                + self.decode_per_ctx_token * ctx_sum)
+
+    def hybrid_time(self, chunk_lens: List[int], prefix_lens: List[int],
+                    decode_batch: int,
+                    decode_ctxs: Optional[List[int]] = None,
+                    *, decode_ctx_sum: Optional[int] = None) -> float:
+        t = self.prefill_time(chunk_lens, prefix_lens)
+        if decode_batch:
+            t += self.decode_time(decode_batch, decode_ctxs,
+                                  ctx_sum=decode_ctx_sum)
+        return t
+
+    # ------------------------------------------------------------------ #
+    def kv_capacity_tokens(self) -> int:
+        return self.kv_capacity
+
+    def kv_transfer_bytes(self, prompt_len: int) -> int:
+        return prompt_len * self.kv_bytes_per_token
+
+    # ------------------------------------------------------------------ #
+    def to_json(self) -> dict:
+        return {k: getattr(self, k) for k in FITTED_CONSTANT_FIELDS}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "FittedExecutor":
+        kw = {k: d[k] for k in FITTED_CONSTANT_FIELDS if k in d}
+        return cls(**kw)
+
+    @classmethod
+    def from_constants(cls, consts: dict,
+                       like: Optional[InstanceCostModel] = None
+                       ) -> "FittedExecutor":
+        """Build from fitted timing constants, inheriting the capacity /
+        transfer geometry of an analytic model (``like``) so the fitted
+        cell admits exactly as many requests as the analytic one."""
+        kw = {k: consts[k] for k in FITTED_CONSTANT_FIELDS if k in consts}
+        if like is not None:
+            kw.setdefault("kv_capacity", like.kv_capacity_tokens())
+            kw.setdefault("kv_bytes_per_token", like._c.kv_per_tok)
+            kw.setdefault("ctx_clamp", like.ctx_clamp)
+        return cls(**kw)

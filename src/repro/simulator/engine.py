@@ -62,6 +62,13 @@ class _Event:
 
 
 class SimulationEngine:
+    # Optional scheduling-decision trace (sim-to-real conformance): when a
+    # list is attached, ``activate`` appends one
+    # ("slot", t_start, iid, kind, duration, (rids...)) entry per slot it
+    # starts.  Shared with ``PolicySystemBase.decision_log`` so admission
+    # and slot events interleave into one totally ordered sequence.
+    decision_log: Optional[List] = None
+
     def __init__(self, system: ServingSystem):
         self.system = system
         self.heap: List[_Event] = []
@@ -88,6 +95,10 @@ class SimulationEngine:
         kind, dur, reqs = inst.next_slot(self.now)
         if kind == "idle":
             return
+        if self.decision_log is not None:
+            self.decision_log.append(
+                ("slot", self.now, inst.iid, kind, dur,
+                 tuple(r.rid for r in reqs)))
         self._executing[inst.iid] = True
         t_end = self.now + dur
         self.push_call(t_end, self._complete_slot, inst, kind, reqs, t_end)

@@ -127,6 +127,12 @@ def _run_cell(spec: Dict) -> Dict:
     cost = InstanceCostModel(cfg=get_config(spec["model"]),
                              hw=HARDWARE[spec["hw"]],
                              tp=spec["tp"], pp=spec["pp"])
+    if spec.get("calibration"):      # None = analytic (roofline) cell
+        # measured-constants executor: timing from the saved
+        # CalibrationReport fit, capacity/transfer geometry inherited
+        # from the analytic model it replaces (import is numpy-only)
+        from repro.serving.calibration import load_fitted_executor
+        cost = load_fitted_executor(spec["calibration"], like=cost)
     describe = describe_strategy(spec["strategy"])
     tenants = spec.get("tenants")
     if tenants:
@@ -242,6 +248,15 @@ class ExperimentRunner:
     # attainment delta isolates the faults (the schedule itself derives
     # its own RNG stream from (spec, cell seed)).
     faults: Union[None, str, Sequence[Optional[str]]] = None
+    # calibrated-executor axis (sim-to-real write-back): None = every
+    # cell analytic (legacy); a path to a saved CalibrationReport JSON
+    # (benchmarks/bench_calibration.py) — or a sequence of paths/None —
+    # makes the cost model a grid level: None cells schedule with the
+    # roofline model, path cells with a FittedExecutor carrying the
+    # report's measured constants.  Seed-neutral like ``autoscale``: a
+    # calibrated cell and its analytic baseline replay the IDENTICAL
+    # arrival sequence, so the metric delta isolates the cost model.
+    calibration: Union[None, str, Sequence[Optional[str]]] = None
     # split the scored window into this many equal attainment phases
     # (rows gain attainment_by_phase / attainment_phase_min)
     phases: Optional[int] = None
@@ -281,6 +296,10 @@ class ExperimentRunner:
                              "duration, and a fault mid-bisection would "
                              "make the frontier measure luck, not "
                              "capacity")
+        if self.calibration is not None and self.mode == "goodput":
+            raise ValueError("calibration cells are fixed-rate only for "
+                             "now: a frontier over mixed cost models "
+                             "would hide which model moved it")
 
     # ---- grid axes ---------------------------------------------------- #
     def _instance_counts(self) -> Tuple[int, ...]:
@@ -307,6 +326,13 @@ class ExperimentRunner:
         if isinstance(self.faults, str):
             return (self.faults,)
         return tuple(self.faults)
+
+    def _calibration_axis(self) -> Tuple[Optional[str], ...]:
+        if self.calibration is None:
+            return (None,)
+        if isinstance(self.calibration, str):
+            return (self.calibration,)
+        return tuple(self.calibration)
 
     def _norm_tenants(self) -> Optional[List]:
         """JSON-able tenant entries for cell specs: names stay strings
@@ -390,7 +416,8 @@ class ExperimentRunner:
                     for n in self._instance_counts():
                         for t, p in self._tp_pairs():
                             for ctrl in self._autoscale_axis():
-                                for fv in self._faults_axis():
+                              for fv in self._faults_axis():
+                                for cal in self._calibration_axis():
                                     cell = {**common, "strategy": strat,
                                             "scenario": scen, "rate": rate,
                                             "n_instances": n,
@@ -410,6 +437,10 @@ class ExperimentRunner:
                                         # ditto: faulted vs clean cells
                                         # share arrivals by design
                                         cell["faults"] = fv
+                                    if self.calibration is not None:
+                                        # ditto: calibrated vs analytic
+                                        # cells share arrivals by design
+                                        cell["calibration"] = cal
                                     out.append(cell)
         return out
 
@@ -461,6 +492,10 @@ class ExperimentRunner:
             meta.pop("faults")
         else:
             meta["faults"] = list(self._faults_axis())
+        if self.calibration is None:    # and for the calibration axis
+            meta.pop("calibration")
+        else:
+            meta["calibration"] = list(self._calibration_axis())
         if self.phases is None:
             meta.pop("phases")
         if not isinstance(self.n_instances, int):
@@ -494,14 +529,16 @@ class ExperimentRunner:
         insert their own levels after [scenario] so cells can't overwrite
         each other: a ``tp`` sweep keys ``"tp{T}pp{P}"``, an
         ``n_instances`` sweep keys the count, an ``autoscale`` sweep keys
-        the controller spec (``"static"`` for None), and a ``faults``
-        sweep keys the fault spec (``"none"`` for None), in that
+        the controller spec (``"static"`` for None), a ``faults`` sweep
+        keys the fault spec (``"none"`` for None), and a ``calibration``
+        sweep keys the report path (``"analytic"`` for None), in that
         order."""
         cells = results["cells"]
         multi_n = len({c.get("n_instances") for c in cells}) > 1
         multi_tp = len({(c.get("tp"), c.get("pp")) for c in cells}) > 1
         multi_as = len({c.get("autoscale") for c in cells}) > 1
         multi_f = len({c.get("faults") for c in cells}) > 1
+        multi_cal = len({c.get("calibration") for c in cells}) > 1
         out: Dict[str, Dict[str, Dict]] = {}
         for cell in cells:
             leaf = cell.get("metrics", cell)
@@ -514,6 +551,8 @@ class ExperimentRunner:
                 keys.append(cell.get("autoscale") or "static")
             if multi_f:
                 keys.append(cell.get("faults") or "none")
+            if multi_cal:
+                keys.append(cell.get("calibration") or "analytic")
             if cell.get("mode") != "goodput":
                 keys.append(cell["rate"])
             node = out.setdefault(cell["strategy"], {})

@@ -1,0 +1,185 @@
+"""Property tests for the calibration layer.
+
+Three invariants the conformance harness leans on:
+
+* ``MeasuredExecutor``'s EWMA gain converges onto a constant-time
+  executor's true step time — the measured model the scheduler sees
+  tracks reality, not the analytic seed.
+* ``FittedExecutor`` constants survive a JSON round trip exactly
+  (``to_json`` -> ``json.dumps`` -> ``json.loads`` -> ``from_json``),
+  so a report written by the bench reloads into the identical model.
+* A ``CalibrationReport``'s error quantiles do not depend on the order
+  ops were recorded in — permuting the sample stream changes nothing
+  (unfitted exactly; fitted up to lstsq row-order float wiggle).
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.serving.calibration import (CalibrationRecorder,
+                                       CalibrationReport)
+from repro.serving.engine import MeasuredExecutor
+from repro.simulator.cost_model import FittedExecutor
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+needs_hypothesis = pytest.mark.skipif(
+    not HAVE_HYPOTHESIS, reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+
+SEED_MODEL = FittedExecutor(prefill_base=1e-3, prefill_per_token=1e-4,
+                            decode_base=5e-4, decode_per_seq=2e-4,
+                            decode_per_ctx_token=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# EWMA convergence
+# --------------------------------------------------------------------- #
+def check_ewma_converges(true_prefill: float, true_decode: float,
+                         tokens: int, batch: int) -> None:
+    """Feed a constant observed step time; after enough observations the
+    executor's prediction for that shape must sit within 0.1% of it."""
+    ex = MeasuredExecutor(seed_model=SEED_MODEL)
+    for _ in range(60):
+        ex.observe_prefill(tokens, true_prefill)
+        ex.observe_decode(true_decode, batch=batch, ctx_sum=batch * 32)
+    assert ex.prefill_time([tokens]) == pytest.approx(true_prefill,
+                                                      rel=1e-3)
+    assert ex.decode_time(batch, ctx_sum=batch * 32) == pytest.approx(
+        true_decode, rel=1e-3)
+
+
+def test_ewma_converges_seeded():
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        check_ewma_converges(
+            true_prefill=float(rng.uniform(1e-4, 5e-2)),
+            true_decode=float(rng.uniform(1e-4, 5e-2)),
+            tokens=int(rng.integers(1, 512)),
+            batch=int(rng.integers(1, 16)))
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=40)
+    @given(true_prefill=st.floats(1e-4, 5e-2),
+           true_decode=st.floats(1e-4, 5e-2),
+           tokens=st.integers(1, 512),
+           batch=st.integers(1, 16))
+    def test_ewma_converges_prop(true_prefill, true_decode, tokens, batch):
+        check_ewma_converges(true_prefill, true_decode, tokens, batch)
+
+
+# --------------------------------------------------------------------- #
+# FittedExecutor JSON round trip
+# --------------------------------------------------------------------- #
+def check_fitted_roundtrip(kwargs) -> None:
+    fitted = FittedExecutor(**kwargs)
+    back = FittedExecutor.from_json(json.loads(json.dumps(
+        fitted.to_json())))
+    assert back == fitted        # dataclass equality: every field, exact
+
+
+def test_fitted_roundtrip_seeded():
+    rng = np.random.default_rng(5)
+    for _ in range(16):
+        check_fitted_roundtrip(dict(
+            prefill_base=float(rng.uniform(0, 1e-2)),
+            prefill_per_token=float(rng.uniform(1e-7, 1e-3)),
+            decode_base=float(rng.uniform(0, 1e-2)),
+            decode_per_seq=float(rng.uniform(0, 1e-3)),
+            decode_per_ctx_token=float(rng.uniform(0, 1e-6)),
+            kv_capacity=int(rng.integers(1, 10**8)),
+            kv_bytes_per_token=int(rng.integers(0, 10**7)),
+            ctx_clamp=int(rng.integers(0, 4096))))
+
+
+def test_fitted_from_json_ignores_unknown_keys():
+    blob = SEED_MODEL.to_json()
+    blob["future_field"] = 123.0
+    assert FittedExecutor.from_json(blob) == SEED_MODEL
+
+
+if HAVE_HYPOTHESIS:
+    finite = st.floats(0, 1e-2, allow_nan=False, allow_infinity=False)
+
+    @needs_hypothesis
+    @settings(max_examples=60)
+    @given(prefill_base=finite, prefill_per_token=finite,
+           decode_base=finite, decode_per_seq=finite,
+           decode_per_ctx_token=finite,
+           kv_capacity=st.integers(1, 10**9),
+           kv_bytes_per_token=st.integers(0, 10**8),
+           ctx_clamp=st.integers(0, 10**5))
+    def test_fitted_roundtrip_prop(**kwargs):
+        check_fitted_roundtrip(kwargs)
+
+
+# --------------------------------------------------------------------- #
+# report permutation invariance
+# --------------------------------------------------------------------- #
+def _recorder_from(samples) -> CalibrationRecorder:
+    rec = CalibrationRecorder()
+    for kind, a, b, dt in samples:
+        if kind == "p":
+            rec.record_prefill(a, dt)
+        else:
+            rec.record_decode(a, b, dt)
+    return rec
+
+
+def _sample_stream(rng, n=40):
+    out = []
+    for _ in range(n):
+        if rng.random() < 0.5:
+            toks = int(rng.integers(1, 256))
+            out.append(("p", toks, 0,
+                        1e-3 + 2e-4 * toks * float(rng.uniform(0.9, 1.1))))
+        else:
+            batch = int(rng.integers(1, 8))
+            ctx = int(rng.integers(batch, batch * 200))
+            out.append(("d", batch, ctx,
+                        5e-4 + 1e-4 * batch
+                        * float(rng.uniform(0.9, 1.1))))
+    return out
+
+
+def check_permutation_invariant(samples, perm_seed: int) -> None:
+    rng = np.random.default_rng(perm_seed)
+    shuffled = list(samples)
+    rng.shuffle(shuffled)
+    a = CalibrationReport.build(_recorder_from(samples), SEED_MODEL)
+    b = CalibrationReport.build(_recorder_from(shuffled), SEED_MODEL)
+    assert a.n_prefill == b.n_prefill and a.n_decode == b.n_decode
+    # unfitted errors are per-op against a fixed model: the multiset is
+    # identical, so every quantile matches exactly
+    assert a.unfitted == b.unfitted
+    # the lstsq fit sees the same rows in a different order; allow float
+    # summation wiggle only
+    for key, want in a.fitted.items():
+        assert b.fitted[key] == pytest.approx(want, abs=1e-8)
+    for key, want in a.constants.items():
+        assert b.constants[key] == pytest.approx(
+            want, rel=1e-6, abs=1e-12)
+
+
+def test_report_permutation_invariant_seeded():
+    rng = np.random.default_rng(9)
+    for perm_seed in range(5):
+        check_permutation_invariant(_sample_stream(rng), perm_seed)
+
+
+if HAVE_HYPOTHESIS:
+    @needs_hypothesis
+    @settings(max_examples=20)
+    @given(stream_seed=st.integers(0, 2**31 - 1),
+           perm_seed=st.integers(0, 2**31 - 1))
+    def test_report_permutation_invariant_prop(stream_seed, perm_seed):
+        rng = np.random.default_rng(stream_seed)
+        check_permutation_invariant(_sample_stream(rng), perm_seed)

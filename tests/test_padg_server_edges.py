@@ -1,0 +1,168 @@
+"""``PaDGServer.serve`` edge cases (fake backend: no jax required).
+
+Covers the satellite checklist: empty traces keep the full summary key
+set (stable JSONL schema), ``time_scale`` really dilates wall time,
+over-long prompts take the all-rejected path without touching the
+scheduler, and ``shutdown()`` releases every actor-registry entry taken
+in ``__init__`` (the PR 6/7 mitosis-leak regression, server edition).
+"""
+import time
+
+import pytest
+
+from repro.core.mitosis import _ACTOR_REGISTRY, registry_size
+from repro.core.request import Request, RequestState
+from repro.core.slo import SLO
+from repro.serving.padg_server import PaDGServer, ServeStats
+from repro.serving.replay import SlotConfig, VirtualClock, WallClock
+from repro.simulator.cost_model import FittedExecutor
+
+B, S = 2, 64
+SLO_SET = SLO(ttft=0.5, tpot=0.05)
+SUMMARY_KEYS = {"finished", "rejected", "ttft_p50", "ttft_p90",
+                "tpot_p50", "tokens"}
+
+
+def model() -> FittedExecutor:
+    return FittedExecutor(prefill_base=1e-3, prefill_per_token=1e-4,
+                          decode_base=5e-4, decode_per_seq=2e-4,
+                          kv_capacity=B * S)
+
+
+def make_server() -> PaDGServer:
+    return PaDGServer(None, n_instances=2, slo=SLO_SET,
+                      econf=SlotConfig(max_batch=B, max_seq_len=S),
+                      backend="fake", executor=model())
+
+
+def reqs(n=4, span=0.05, plen=10, olen=3):
+    gap = span / max(1, n - 1) if n > 1 else 0.0
+    return [Request(rid=i, arrival_time=i * gap, prompt_len=plen,
+                    output_len=olen) for i in range(n)]
+
+
+# --------------------------------------------------------------------- #
+def test_empty_trace_full_summary_schema():
+    server = make_server()
+    try:
+        stats = server.serve([], clock=VirtualClock())
+    finally:
+        server.shutdown()
+    assert stats.finished == [] and stats.rejected == []
+    s = stats.summary()
+    assert set(s) == SUMMARY_KEYS, "empty summary must keep the schema"
+    assert s["finished"] == 0 and s["tokens"] == 0
+    assert s["ttft_p50"] == 0.0 and s["tpot_p50"] == 0.0
+
+
+def test_summary_schema_stable_empty_vs_loaded():
+    """The JSONL schema contract: the key set must not depend on whether
+    anything finished."""
+    empty = ServeStats(finished=[]).summary()
+    server = make_server()
+    try:
+        loaded = server.serve(reqs(), clock=VirtualClock()).summary()
+    finally:
+        server.shutdown()
+    assert set(empty) == set(loaded) == SUMMARY_KEYS
+    assert loaded["finished"] == 4 and loaded["tokens"] == 12
+
+
+def test_all_requests_rejected():
+    server = make_server()
+    try:
+        bad = [Request(rid=i, arrival_time=0.0, prompt_len=S + 10,
+                       output_len=2) for i in range(3)]
+        stats = server.serve(bad, clock=VirtualClock())
+    finally:
+        server.shutdown()
+    assert stats.finished == []
+    assert len(stats.rejected) == 3
+    assert all(r.state is RequestState.FAILED for r in stats.rejected)
+    s = stats.summary()
+    assert set(s) == SUMMARY_KEYS
+    assert s["finished"] == 0 and s["rejected"] == 3
+
+
+def test_rejection_boundary_is_engine_seq_cap():
+    """prompt_len == max_seq_len - 2 is the largest servable prompt (one
+    slot position for the first token, one for the cap sentinel)."""
+    server = make_server()
+    try:
+        ok = Request(rid=0, arrival_time=0.0, prompt_len=S - 2,
+                     output_len=1)
+        too_big = Request(rid=1, arrival_time=0.0, prompt_len=S - 1,
+                          output_len=1)
+        stats = server.serve([ok, too_big], clock=VirtualClock())
+    finally:
+        server.shutdown()
+    assert [r.rid for r in stats.finished] == [0]
+    assert [r.rid for r in stats.rejected] == [1]
+
+
+def test_time_scale_dilates_wall_clock():
+    span = 0.08
+    elapsed = {}
+    for scale in (1.0, 4.0):
+        server = make_server()
+        try:
+            t0 = time.perf_counter()
+            stats = server.serve(reqs(n=3, span=span), time_scale=scale)
+            elapsed[scale] = time.perf_counter() - t0
+        finally:
+            server.shutdown()
+        assert len(stats.finished) == 3
+        # trace time is clock-paced: serving can't end before the last
+        # arrival, i.e. span * scale wall seconds in
+        assert elapsed[scale] >= span * scale * 0.9
+    assert elapsed[4.0] > elapsed[1.0]
+    # loose upper bound: the fake backend executes instantly, so wall
+    # time is dominated by the dilated arrival span
+    assert elapsed[4.0] < span * 4.0 + 1.0
+
+
+def test_explicit_wall_clock_object():
+    server = make_server()
+    try:
+        stats = server.serve(reqs(n=2, span=0.01), clock=WallClock(2.0))
+    finally:
+        server.shutdown()
+    assert len(stats.finished) == 2
+    for r in stats.finished:
+        assert r.finish_time >= r.first_token_time >= 0.0
+
+
+# --------------------------------------------------------------------- #
+def test_registry_released_on_shutdown():
+    snapshot = dict(_ACTOR_REGISTRY)
+    server = make_server()
+    assert registry_size() >= len(snapshot)
+    assert all(inst.iid in _ACTOR_REGISTRY for inst in server.instances)
+    server.serve(reqs(), clock=VirtualClock())
+    server.shutdown()
+    assert _ACTOR_REGISTRY == snapshot, (
+        "PaDGServer leaked actor-registry entries across shutdown")
+    server.shutdown()          # idempotent
+    assert _ACTOR_REGISTRY == snapshot
+
+
+def test_registry_released_by_context_manager():
+    snapshot = dict(_ACTOR_REGISTRY)
+    with make_server() as server:
+        stats = server.serve(reqs(n=2), clock=VirtualClock())
+        assert len(stats.finished) == 2
+    assert _ACTOR_REGISTRY == snapshot
+
+
+def test_fake_backend_requires_executor():
+    with pytest.raises(ValueError, match="executor"):
+        PaDGServer(None, n_instances=1, slo=SLO_SET,
+                   econf=SlotConfig(max_batch=B, max_seq_len=S),
+                   backend="fake")
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="backend"):
+        PaDGServer(None, n_instances=1, slo=SLO_SET,
+                   econf=SlotConfig(max_batch=B, max_seq_len=S),
+                   backend="quantum")

@@ -11,8 +11,11 @@ from repro.configs import get_smoke_config
 from repro.core.request import Request
 from repro.core.slo import SLO
 from repro.models import forward, init_params
-from repro.serving.engine import EngineConfig, ServingEngine
+from repro.serving.calibration import CalibrationRecorder
+from repro.serving.engine import (EngineConfig, MeasuredExecutor,
+                                  ServingEngine)
 from repro.serving.padg_server import PaDGServer
+from repro.simulator.cost_model import FittedExecutor
 
 
 def tiny_cfg():
@@ -97,3 +100,65 @@ def test_padg_server_end_to_end(arch):
     for r in stats.finished:
         assert len(r.generated) == 4
         assert r.finish_time >= r.first_token_time >= 0
+    server.shutdown()
+
+
+# --------------------------------------------------------------------- #
+# MeasuredExecutor: shape-aware predictions
+# --------------------------------------------------------------------- #
+def test_measured_executor_seeds_from_model_probes():
+    """Seeded from an exactly-linear model, the probe-derived constants
+    reproduce the model's predictions before any observation."""
+    seed = FittedExecutor(prefill_base=2e-3, prefill_per_token=3e-4,
+                          decode_base=1e-3, decode_per_seq=4e-4,
+                          decode_per_ctx_token=2e-6)
+    ex = MeasuredExecutor(seed_model=seed)
+    for n in (1, 17, 400):
+        assert ex.prefill_time([n]) == pytest.approx(seed.prefill_time([n]))
+    assert ex.decode_time(3, ctx_sum=500) == pytest.approx(
+        seed.decode_time(3, ctx_sum=500))
+
+
+def test_measured_executor_decode_shape_aware():
+    """decode_time must grow with batch AND with context — the flat EWMA
+    regression this replaces predicted one constant for every shape."""
+    ex = MeasuredExecutor(seed_model=FittedExecutor(
+        decode_base=1e-3, decode_per_seq=4e-4, decode_per_ctx_token=2e-6))
+    assert ex.decode_time(0) == 0.0
+    assert ex.decode_time(4) > ex.decode_time(2) > ex.decode_time(1)
+    assert (ex.decode_time(2, ctx_sum=4096) > ex.decode_time(2, ctx_sum=64)
+            > ex.decode_time(2, ctx_sum=0))
+    # observations rescale, but never flatten, the shape dependence
+    for _ in range(20):
+        ex.observe_decode(5e-3, batch=2, ctx_sum=64)
+    assert ex.decode_time(4, ctx_sum=128) > ex.decode_time(2, ctx_sum=64)
+
+
+def test_measured_executor_legacy_fallbacks():
+    """Without a model to probe, the documented flat fallbacks apply."""
+    ex = MeasuredExecutor()
+    assert ex.prefill_time([10]) == pytest.approx(10 * 2e-4)
+    assert ex.decode_time(3) == pytest.approx(3 * 5e-2)
+    ex = MeasuredExecutor(fallback_prefill=1e-3, fallback_decode=1e-2)
+    assert ex.prefill_time([4]) == pytest.approx(4e-3)
+    assert ex.decode_time(2) == pytest.approx(2e-2)
+
+
+def test_engine_recorder_captures_op_shapes():
+    cfg = tiny_cfg()
+    rec = CalibrationRecorder()
+    eng = ServingEngine(cfg, seed=5, recorder=rec,
+                        econf=EngineConfig(max_batch=2, max_seq_len=64,
+                                           eos_token=-1))
+    prompt = [5, 9, 17, 4]
+    req = Request(rid=0, arrival_time=0.0, prompt_len=len(prompt),
+                  output_len=3, prompt_tokens=prompt)
+    eng.prefill(req)
+    while len(req.generated) < 3:
+        eng.decode_step()
+    assert [toks for toks, _ in rec.prefill] == [len(prompt)]
+    assert len(rec.decode) >= 2
+    for batch, ctx_sum, dt in rec.decode:
+        assert batch == 1 and ctx_sum >= len(prompt) and dt > 0.0
+    for _, dt in rec.prefill:
+        assert dt > 0.0
