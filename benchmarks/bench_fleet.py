@@ -1,0 +1,198 @@
+"""Multi-model fleet serving: cost-aware routing + budget-constrained
+rebalancing (the fleet layer, ``repro.fleet``).
+
+Runs ``fleet_grid_runner()`` — the canonical grid behind
+``tests/golden/fleet_grid.json``: a qwen1.5-32b "chat" pool and a
+llama-30b "code" pool (both EcoServe stacks, 4 GPUs/instance) sharing
+a 24-GPU budget, fed by two model-tagged tenant streams whose mix
+shifts mid-run in opposite directions (``shift:4,1`` vs ``shift:1,4``).
+Every cell is {pinned, cheapest-feasible, quality-tiered} routing x
+{static partition, budget-constrained rebalancing} over the IDENTICAL
+arrival sequence (fleet cells seed under the constant "fleet" label),
+so routing and rebalancing deltas isolate the policy.  The surging
+tenant rides the smaller model, so quality-tiered routing may legally
+spill its breaching requests up-tier into the draining qwen pool.
+
+The headline assertions:
+
+* **rebalancing beats the static partition** — under every routing
+  policy, the rebalanced cell's min-over-pools attainment is STRICTLY
+  above its static twin's: the static split strands capacity on the
+  wrong side of the mix shift, the rebalancer moves it (donor-funded
+  contractions + commissions through the mitosis/actuator path,
+  provisioning delay and all);
+* **routing alone also helps** — quality-tiered's static cell holds a
+  strictly higher min-over-pools attainment than pinned's static cell:
+  spillover absorbs part of the surge before any capacity moves;
+* **the budget holds** — no recorded trajectory point ever commits more
+  GPUs than the budget, and no pool's committed target drops below one
+  instance (the structural invariants of ``FleetRebalanceHarness``).
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet
+    PYTHONPATH=src python -m benchmarks.bench_fleet --smoke \
+        --stream rows.jsonl             # the CI cell
+    PYTHONPATH=src python -m benchmarks.bench_fleet --write-golden
+"""
+from __future__ import annotations
+
+import pathlib
+import time
+
+from benchmarks.common import emit
+from repro.simulator.runner import ExperimentRunner, fleet_grid_runner
+
+GOLDEN_PATH = (pathlib.Path(__file__).resolve().parent.parent
+               / "tests" / "golden" / "fleet_grid.json")
+
+CONTROL_LEVELS = ("static", "rebalance")
+
+
+def _cell_table(results: dict) -> None:
+    grid = ExperimentRunner.grid(results)
+    meta = results["meta"]
+    rate = meta["rates"][0]
+    scen = meta["scenarios"][0]
+    print("router,control,att_pool_min,attainment,completion,"
+          "pool_sizes,routed,moves+ups")
+    for router in meta["strategies"]:
+        for level in CONTROL_LEVELS:
+            m = grid[router][scen][level][rate]
+            fl = m["fleet"]
+            tl = m.get("timeline", {})
+            churn = "-" if not tl else (f"{tl.get('n_moves', 0)}+"
+                                        f"{tl.get('n_ups', 0)}")
+            print(f"{router},{level},{m['attainment_pool_min']:.4f},"
+                  f"{m['attainment']:.4f},{m['completion']:.4f},"
+                  f"{fl['n_instances']},{fl['routed']},{churn}")
+
+
+def _assert_rebalance_beats_static(results: dict) -> dict:
+    """Min-over-pools attainment: the rebalanced cell strictly above its
+    static twin under every routing policy."""
+    grid = ExperimentRunner.grid(results)
+    meta = results["meta"]
+    rate = meta["rates"][0]
+    scen = meta["scenarios"][0]
+    margins = {}
+    for router in meta["strategies"]:
+        static = grid[router][scen]["static"][rate]["attainment_pool_min"]
+        rebal = grid[router][scen]["rebalance"][rate]["attainment_pool_min"]
+        margins[router] = {"static": static, "rebalance": rebal}
+        assert rebal > static, (
+            f"budget-constrained rebalancing must strictly beat the "
+            f"static partition on min-over-pools attainment under "
+            f"{router} routing: {rebal:.3f} vs {static:.3f}")
+    assert (margins["quality-tiered"]["static"]
+            > margins["pinned"]["static"]), (
+        "quality-tiered spillover must lift the static floor above "
+        "pinned routing's")
+    return margins
+
+
+def _assert_budget_and_floor(results: dict) -> None:
+    """Every rebalanced cell's recorded trajectory honors the budget and
+    the one-instance-per-pool floor at every control tick."""
+    for cell in results["cells"]:
+        if not cell.get("autoscale"):
+            continue
+        m = cell["metrics"]
+        tl = m["timeline"]
+        budget = tl["budget"]
+        per_pool = tl["per_pool"]
+        devices = {p["name"]: p["devices_per_instance"]
+                   for p in cell["system"]["pools"]}
+        trajs = {name: pool_tl["trajectory"]
+                 for name, pool_tl in per_pool.items()}
+        lengths = {len(t) for t in trajs.values()}
+        assert len(lengths) == 1, "per-pool trajectories out of sync"
+        for i in range(lengths.pop()):
+            committed = sum(trajs[n][i]["n_target"] * devices[n]
+                            for n in trajs)
+            assert committed <= budget, (
+                f"tick {i}: committed {committed} GPUs over the "
+                f"budget of {budget}")
+            for n in trajs:
+                assert trajs[n][i]["n_target"] >= 1, (
+                    f"tick {i}: pool {n} dropped below one instance")
+
+
+def run(stream: str = None):
+    runner = fleet_grid_runner()
+    runner.stream_path = stream
+    t0 = time.time()
+    results = runner.run()
+    dt = time.time() - t0
+    assert not results.get("errors"), results.get("errors")
+    print("\n== Fleet serving: routing x rebalancing under a mid-run "
+          "mix shift ==")
+    _cell_table(results)
+    margins = _assert_rebalance_beats_static(results)
+    _assert_budget_and_floor(results)
+    print("\n  min-over-pools attainment, static vs rebalanced:")
+    for router, v in margins.items():
+        print(f"    {router}: {v['static']:.3f} -> {v['rebalance']:.3f}")
+    print("  rebalancing strictly beat the static partition under every "
+          "router; budget and one-instance floor held at every tick")
+    emit("fleet_grid", dt * 1e6, f"cells={len(results['cells'])}")
+    return {"results": results, "margins": margins}
+
+
+def run_smoke(stream: str = None) -> dict:
+    """The CI cell: one pinned-router fleet with the rebalancer on the
+    shifting mix — proves routing, per-pool scoring, and donor-funded
+    rebalancing end to end on a short clock."""
+    runner = ExperimentRunner(
+        strategies=("pinned",), scenarios=("poisson",), rates=(6.0,),
+        tenants=(("sharegpt", 0.5, "shift:4,1", "qwen1.5-32b"),
+                 ("longbench", None, "shift:1,4", "llama-30b")),
+        fleet="chat=qwen1.5-32b/ecoserve/4,code=llama-30b/ecoserve/2"
+              ";budget=24",
+        autoscale=("rebalance",), phases=4,
+        model="llama-30b", hw="L20", tp=4, pp=1,
+        duration=20.0, warmup=3.0,
+        base_seed=42, n_workers=1, stream_path=stream)
+    results = runner.run()
+    assert not results.get("errors"), results.get("errors")
+    (cell,) = results["cells"]
+    m = cell["metrics"]
+    fl = m["fleet"]
+    tl = m["timeline"]
+    print(f"smoke: fleet pinned+rebalance attainment={m['attainment']:.3f} "
+          f"pool_min={m['attainment_pool_min']:.3f} "
+          f"sizes={fl['n_instances']} routed={fl['routed']} "
+          f"churn={tl['n_moves']}+{tl['n_ups']}/{tl['n_downs']}")
+    assert m["finished"] > 0, "smoke cell ran empty"
+    assert fl["committed"] <= fl["budget"], "smoke cell blew the budget"
+    assert all(v >= 1 for v in fl["n_instances"].values()), (
+        "smoke cell emptied a pool")
+    assert set(m["attainment_by_pool"]) == {"chat", "code"}, (
+        "per-pool attainment grid missing a pool")
+    assert tl["n_ups"] + tl["n_moves"] + tl["n_downs"] > 0, (
+        "rebalancer never acted on the mix shift")
+    return results
+
+
+def write_golden() -> None:
+    results = fleet_grid_runner().run()
+    assert not results.get("errors"), results.get("errors")
+    GOLDEN_PATH.parent.mkdir(parents=True, exist_ok=True)
+    ExperimentRunner.save(results, GOLDEN_PATH)
+    print(f"wrote {len(results['cells'])} cells to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="one pinned+rebalance fleet cell (CI)")
+    ap.add_argument("--stream", default=None, metavar="PATH",
+                    help="append one JSONL row per finished cell")
+    ap.add_argument("--write-golden", action="store_true",
+                    help="regenerate tests/golden/fleet_grid.json")
+    args = ap.parse_args()
+    if args.write_golden:
+        write_golden()
+    elif args.smoke:
+        run_smoke(stream=args.stream)
+    else:
+        run(stream=args.stream)

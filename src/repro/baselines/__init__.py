@@ -178,6 +178,23 @@ register(StrategySpec(
     provenance="ROADMAP policy composition: EcoServe machinery under "
                "blind round-robin placement — ablates Algorithm 1 "
                "inter-instance routing"))
+# ROADMAP composition sweep (goodput grid): SLO-aware FuDG and a
+# starvation-prone-but-fast PaDG queue.  Bundles mirror the grammar
+# exactly (see test_registered_composition_and_grammar_agree): DistServe
+# admits immediately, so a queue swap upgrades it to backpressure;
+# EcoServe's timeout-forced admission survives, so only the queue moves.
+register(StrategySpec(
+    name="distserve+priority", base="distserve",
+    queue="slo-priority", admission="backpressure",
+    kwargs=(("prefill_ratio", 0.25),),
+    provenance="ROADMAP composition sweep: EDF queue over per-class "
+               "TTFT deadlines + backpressure admission on DistServe's "
+               "intra-node FuDG machinery"))
+register(StrategySpec(
+    name="ecoserve+spf", base="ecoserve", queue="shortest-prompt",
+    provenance="ROADMAP composition sweep: shortest-prompt-first queue "
+               "on EcoServe PaDG machinery (TTFT-greedy, "
+               "starvation-prone under mixed prompt lengths)"))
 
 STRATEGIES: Tuple[str, ...] = tuple(REGISTRY)
 

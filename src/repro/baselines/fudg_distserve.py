@@ -32,7 +32,7 @@ class DistServeSystem(PolicySystemBase):
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
                  prefill_ratio: float = 0.5, n_nodes: int = None,
                  queue_discipline=None, admission=None, routing=None,
-                 failure=None):
+                 failure=None, iid_base: int = 0):
         """``n_instances`` total; a ``prefill_ratio`` fraction become
         prefill instances, the rest decode instances, colocated per node."""
         self.prefill_ratio = prefill_ratio
@@ -40,18 +40,23 @@ class DistServeSystem(PolicySystemBase):
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
                          admission=admission, routing=routing,
-                         failure=failure)
+                         failure=failure, iid_base=iid_base)
 
     def _build(self, n_instances: int) -> None:
         cost = self.cost
         n_prefill = max(1, round(n_instances * self.prefill_ratio))
         n_decode = max(1, n_instances - n_prefill)
         self.prefill_insts: List[Instance] = [
-            _PrefillInstance(i, cost, cost.kv_capacity_tokens())
+            _PrefillInstance(self.iid_base + i, cost,
+                             cost.kv_capacity_tokens())
             for i in range(n_prefill)
         ]
+        # decode ids sit 1000 above the band base — far enough from any
+        # realistic prefill count, and still inside the pool's band when
+        # a fleet hands out bases in strides of 10000
         self.decode_insts: List[Instance] = [
-            Instance(1000 + i, cost, cost.kv_capacity_tokens())
+            Instance(self.iid_base + 1000 + i, cost,
+                     cost.kv_capacity_tokens())
             for i in range(n_decode)
         ]
         self.instances = self.prefill_insts + self.decode_insts

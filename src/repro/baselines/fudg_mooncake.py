@@ -32,23 +32,27 @@ class MoonCakeSystem(PolicySystemBase):
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
                  prefill_ratio: float = 0.5,
                  queue_discipline=None, admission=None, routing=None,
-                 failure=None):
+                 failure=None, iid_base: int = 0):
         self.prefill_ratio = prefill_ratio
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
                          admission=admission, routing=routing,
-                         failure=failure)
+                         failure=failure, iid_base=iid_base)
 
     def _build(self, n_instances: int) -> None:
         cost = self.cost
         n_prefill = max(1, round(n_instances * self.prefill_ratio))
         n_decode = max(1, n_instances - n_prefill)
         self.prefill_insts = [
-            _PrefillInstance(i, cost, cost.kv_capacity_tokens())
+            _PrefillInstance(self.iid_base + i, cost,
+                             cost.kv_capacity_tokens())
             for i in range(n_prefill)
         ]
+        # decode ids 1000 above the band base (see DistServe: disjoint
+        # from prefill ids, inside the pool's fleet band)
         self.decode_insts = [
-            Instance(1000 + i, cost, cost.kv_capacity_tokens())
+            Instance(self.iid_base + 1000 + i, cost,
+                     cost.kv_capacity_tokens())
             for i in range(n_decode)
         ]
         self.instances = self.prefill_insts + self.decode_insts

@@ -94,12 +94,12 @@ class SarathiSystem(PolicySystemBase):
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
                  chunk_tokens: int = 512,
                  queue_discipline=None, admission=None, routing=None,
-                 failure=None):
+                 failure=None, iid_base: int = 0):
         self.chunk_tokens = chunk_tokens
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
                          admission=admission, routing=routing,
-                         failure=failure)
+                         failure=failure, iid_base=iid_base)
 
     def _make_instance(self, iid: int) -> Instance:
         return SarathiInstance(iid, self.cost,

@@ -23,8 +23,8 @@ class VLLMSystem(PolicySystemBase):
 
     def __init__(self, cost: InstanceCostModel, n_instances: int, slo=None,
                  queue_discipline=None, admission=None, routing=None,
-                 failure=None):
+                 failure=None, iid_base: int = 0):
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
                          admission=admission, routing=routing,
-                         failure=failure)
+                         failure=failure, iid_base=iid_base)

@@ -31,7 +31,7 @@ class EcoServeSystem(PolicySystemBase):
                  plus_plus: bool = False,
                  chunked_fallback: int = 0,
                  queue_discipline=None, admission=None, routing=None,
-                 failure=None, instance_kwargs=None):
+                 failure=None, instance_kwargs=None, iid_base: int = 0):
         """``slo`` is a bare ``SLO`` or a multi-tenant ``SLOClassSet``;
         with a class set, admission/routing/slack all run against each
         request's own class budgets (single-class sets are bit-identical
@@ -58,7 +58,7 @@ class EcoServeSystem(PolicySystemBase):
         super().__init__(cost, n_instances, slo,
                          queue_discipline=queue_discipline,
                          admission=admission, routing=routing,
-                         failure=failure)
+                         failure=failure, iid_base=iid_base)
 
     def _build(self, n_instances: int) -> None:
         self.sched = OverallScheduler(
@@ -66,7 +66,7 @@ class EcoServeSystem(PolicySystemBase):
             n_upper=self.n_upper, conservative=self.plus_plus,
             reachable=self.transport.instance_reachable)
         for i in range(n_instances):
-            inst = self._make_instance(i)
+            inst = self._make_instance(self.iid_base + i)
             self.instances.append(inst)
             self.sched.add_instance(inst)
 

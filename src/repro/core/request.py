@@ -25,6 +25,10 @@ class Request:
     # (see ``repro.core.slo.SLOClassSet``); single-tenant runs leave it at
     # DEFAULT_SLO_CLASS and behave exactly as before
     slo_class: str = "default"
+    # fleet tag: which model the client asked for (``repro.fleet`` routes
+    # on it; trace converters preserve it from the raw logs).  None =
+    # untagged — single-model systems never read it
+    model: Optional[str] = None
     state: RequestState = RequestState.QUEUED
     # times this request was resubmitted after losing its instance to a
     # fault (repro.faults); arrival_time is never reset on resubmission,

@@ -96,14 +96,22 @@ class PolicySystemBase:
 
     def __init__(self, cost, n_instances: int, slo=None, *,
                  queue_discipline=None, admission=None, routing=None,
-                 failure=None):
+                 failure=None, iid_base: int = 0):
         """``slo`` is a bare ``SLO``, an ``SLOClassSet``, or None for the
         SLO-blind baselines; policies may be declarative strings
         (``"timeout-forced:4"``) or policy instances.  ``failure``
         (``"drop"`` / ``"resubmit:K"`` / ``"migrate:K"``,
         ``repro.faults``) decides the fate of in-flight requests when an
-        instance crashes, is preempted, or retires under contraction."""
+        instance crashes, is preempted, or retires under contraction.
+
+        ``iid_base`` offsets every instance id the system mints.  The
+        engine's slot table and the mitosis actor registry are keyed by
+        ``iid`` globally, so systems sharing one engine (``repro.fleet``
+        pools) must mint from disjoint bands; 0 (the default) keeps every
+        single-system id — and therefore every golden — exactly as
+        before."""
         self.cost = cost
+        self.iid_base = iid_base
         self.slo_set: Optional[SLOClassSet] = (
             as_slo_class_set(slo) if slo is not None else None)
         self.slo: Optional[SLO] = (
@@ -140,12 +148,12 @@ class PolicySystemBase:
         self.provenance: str = ""
         self._build(n_instances)
         self._next_iid = 1 + max((i.iid for i in self.instances),
-                                 default=-1)
+                                 default=self.iid_base - 1)
 
     # ---------------- construction hooks -------------------------------- #
     def _build(self, n_instances: int) -> None:
         for i in range(n_instances):
-            self.instances.append(self._make_instance(i))
+            self.instances.append(self._make_instance(self.iid_base + i))
 
     def _make_instance(self, iid: int) -> Instance:
         return Instance(iid, self.cost,

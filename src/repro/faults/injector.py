@@ -86,7 +86,11 @@ class FaultInjector:
             victim.set_executor(SlowExecutor(victim.executor, ev.factor))
             engine.push_call(engine.now + ev.duration,
                              self._end_slow, victim)
-            system.fault_stats["slowdowns"] += 1
+            # composite systems (repro.fleet) aggregate fault_stats from
+            # their member pools: charge the stat to the victim's owner
+            owner = system.owner_of(victim) \
+                if hasattr(system, "owner_of") else system
+            owner.fault_stats["slowdowns"] += 1
             entry.update(iid=victim.iid, factor=ev.factor,
                          dur=ev.duration)
         else:

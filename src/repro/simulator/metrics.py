@@ -91,11 +91,19 @@ def run_once(system_factory: Callable[[], object], workload,
     reqs = gen.generate(duration)
     engine = SimulationEngine(system)
     if control is not None:
-        # imported lazily: repro.control depends only on repro.core, but
-        # static cells must not pay (or require) the import
-        from repro.control import ControlLoopHarness, make_controller
-        harness = ControlLoopHarness(
-            system, engine, make_controller(control)).attach()
+        if hasattr(system, "pools"):
+            # a fleet cell: capacity decisions are budget-constrained
+            # rebalancing across the member pools, not single-pool
+            # scaling (control spec "rebalance[:k=v,...]")
+            from repro.fleet import FleetRebalanceHarness
+            harness = FleetRebalanceHarness(system, engine,
+                                            control).attach()
+        else:
+            # imported lazily: repro.control depends only on repro.core,
+            # but static cells must not pay (or require) the import
+            from repro.control import ControlLoopHarness, make_controller
+            harness = ControlLoopHarness(
+                system, engine, make_controller(control)).attach()
     injector = None
     if faults:
         # lazy for the same reason: fault-free cells stay import-free
@@ -152,6 +160,27 @@ def run_once(system_factory: Callable[[], object], workload,
                 if sub else 1.0)
         out["attainment_by_phase"] = by_phase
         out["attainment_phase_min"] = min(by_phase) if by_phase else 1.0
+    if hasattr(system, "pool_of_rid"):
+        # fleet cell (repro.fleet): score each pool over the requests
+        # routed to it — submitted-but-unfinished requests count against
+        # their pool, and the min ranges over pools that received
+        # post-warmup traffic (an idle pool is vacuously fine, matching
+        # the class-grid contract above)
+        met = {id(r) for r in scored
+               if request_meets_slo(r, classes.for_request(r))}
+        by_pool: Dict[str, float] = {}
+        active_pools = []
+        for k, name in enumerate(system.pool_names):
+            sub = [r for r in submitted
+                   if system.pool_of_rid.get(r.rid) == k]
+            by_pool[name] = (sum(1 for r in sub if id(r) in met) /
+                             len(sub)) if sub else 1.0
+            if sub:
+                active_pools.append(name)
+        out["attainment_by_pool"] = by_pool
+        out["attainment_pool_min"] = (
+            min(by_pool[n] for n in active_pools) if active_pools else 1.0)
+        out["fleet"] = system.fleet_summary()
     if harness is not None:
         out["timeline"] = harness.timeline.summary()
     if injector is not None:

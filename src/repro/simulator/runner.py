@@ -55,6 +55,14 @@ seeds):
   Scenario kinds ``"trace:azure"`` / ``"trace:burstgpt"`` replay the
   converted real-trace excerpts (``repro.traces``) rate-normalized to
   the cell rate.
+* ``fleet="chat=llama-30b/ecoserve/4,...;budget=24"`` — multi-model
+  fleet serving (``repro.fleet``): every cell builds N model pools under
+  one GPU budget, the ``strategies`` slot names routing policies, and
+  ``autoscale="rebalance"`` installs the budget-constrained rebalancer.
+  Seed-neutral like ``autoscale`` (constant "fleet" seed label), so all
+  router/rebalance variants replay identical arrivals; rows carry
+  ``attainment_by_pool`` / ``attainment_pool_min`` and a ``fleet``
+  routing/budget digest.
 
 Cells run through ``imap_unordered`` with per-cell error capture: a
 crashing cell yields a row carrying its spec and the error string instead
@@ -85,8 +93,9 @@ HARDWARE = {"L20": GPU_L20, "A800": GPU_A800, "tpu-v5e": TPU_V5E_SIM}
 # the *_by_class / *_min keys appear only on multi-tenant cells, so
 # single-class golden grids keep their legacy rows)
 SUMMARY_KEYS = ("attainment", "attainment_min", "attainment_by_class",
-                "attainment_by_phase", "attainment_phase_min", "timeline",
-                "faults", "completion", "finished",
+                "attainment_by_phase", "attainment_phase_min",
+                "attainment_by_pool", "attainment_pool_min", "fleet",
+                "timeline", "faults", "completion", "finished",
                 "ttft_p50", "ttft_p99", "tpot_p50", "tpot_p99")
 GOODPUT_SUMMARY_KEYS = ("goodput", "target", "probes", "attainment",
                         "attainment_min", "attainment_by_class",
@@ -124,16 +133,6 @@ def _run_cell(spec: Dict) -> Dict:
     # imported here (not module level): repro.baselines pulls in the
     # system classes, which import repro.simulator — a cycle at load time
     from repro.baselines import describe_strategy, make_system
-    cost = InstanceCostModel(cfg=get_config(spec["model"]),
-                             hw=HARDWARE[spec["hw"]],
-                             tp=spec["tp"], pp=spec["pp"])
-    if spec.get("calibration"):      # None = analytic (roofline) cell
-        # measured-constants executor: timing from the saved
-        # CalibrationReport fit, capacity/transfer geometry inherited
-        # from the analytic model it replaces (import is numpy-only)
-        from repro.serving.calibration import load_fitted_executor
-        cost = load_fitted_executor(spec["calibration"], like=cost)
-    describe = describe_strategy(spec["strategy"])
     tenants = spec.get("tenants")
     if tenants:
         # one SLO class per tenant workload (Table 4 budgets); requests
@@ -147,8 +146,33 @@ def _run_cell(spec: Dict) -> Dict:
     else:
         slo = DATASET_SLOS[spec["workload"]]
 
-    def factory():
-        return make_system(spec["strategy"], cost, spec["n_instances"], slo)
+    if spec.get("fleet"):
+        # fleet cell: the strategy slot names a ROUTER; the pools carry
+        # their own models, strategies, and cost models from the spec
+        # string, so the cell-level model/n_instances fields don't apply
+        from repro.fleet import FleetSystem
+
+        def factory():
+            return FleetSystem(spec["fleet"], slo, hw=spec["hw"],
+                               tp=spec["tp"], pp=spec["pp"],
+                               router=spec["strategy"])
+
+        describe = factory().describe()
+    else:
+        cost = InstanceCostModel(cfg=get_config(spec["model"]),
+                                 hw=HARDWARE[spec["hw"]],
+                                 tp=spec["tp"], pp=spec["pp"])
+        if spec.get("calibration"):      # None = analytic (roofline) cell
+            # measured-constants executor: timing from the saved
+            # CalibrationReport fit, capacity/transfer geometry inherited
+            # from the analytic model it replaces (import is numpy-only)
+            from repro.serving.calibration import load_fitted_executor
+            cost = load_fitted_executor(spec["calibration"], like=cost)
+        describe = describe_strategy(spec["strategy"])
+
+        def factory():
+            return make_system(spec["strategy"], cost, spec["n_instances"],
+                               slo)
 
     if spec.get("mode") == "goodput":
         # rate knob stays live inside the search: each probe regenerates
@@ -257,6 +281,17 @@ class ExperimentRunner:
     # calibrated cell and its analytic baseline replay the IDENTICAL
     # arrival sequence, so the metric delta isolates the cost model.
     calibration: Union[None, str, Sequence[Optional[str]]] = None
+    # multi-model fleet axis (repro.fleet): None = every cell single-pool
+    # (legacy); a fleet spec string "name=model/strategy/n,...;budget=G"
+    # — or a sequence of spec strings — makes the fleet a grid level.
+    # With a fleet, the ``strategies`` slot names ROUTERS ("pinned" /
+    # "cheapest-feasible" / "quality-tiered"; default all three) and the
+    # ``autoscale`` axis takes the "rebalance[:k=v,...]" spec.  Seed
+    # discipline: cell seeds use the constant label "fleet" in the
+    # strategy slot and exclude the fleet value itself, so every router x
+    # fleet x autoscale variant replays the IDENTICAL arrival sequence —
+    # routing and rebalancing deltas isolate the policy, not the draw.
+    fleet: Union[None, str, Sequence[str]] = None
     # split the scored window into this many equal attainment phases
     # (rows gain attainment_by_phase / attainment_phase_min)
     phases: Optional[int] = None
@@ -275,8 +310,30 @@ class ExperimentRunner:
 
     def __post_init__(self):
         if self.strategies is None:
-            from repro.baselines import STRATEGIES
-            self.strategies = STRATEGIES
+            if self.fleet is not None:
+                # with a fleet the strategy slot names routers
+                from repro.fleet import ROUTERS
+                self.strategies = tuple(ROUTERS)
+            else:
+                from repro.baselines import STRATEGIES
+                self.strategies = STRATEGIES
+        if self.fleet is not None:
+            if self.mode == "goodput":
+                raise ValueError("fleet cells are fixed-rate only: the "
+                                 "rebalancer's capacity moves and the "
+                                 "goodput search's rate knob would chase "
+                                 "each other")
+            if self.calibration is not None:
+                raise ValueError("calibration is single-pool only; fleet "
+                                 "pools own their per-model cost models")
+            if self.slo_override is not None:
+                raise ValueError("slo_override is single-pool only; fleet "
+                                 "cells score against per-class Table 4 "
+                                 "SLOs")
+            if any(f is None for f in self._fleet_axis()):
+                raise ValueError("fleet axis entries must be fleet spec "
+                                 "strings: a None (no-fleet) entry would "
+                                 "reinterpret the strategy slot mid-grid")
         if self.mode not in ("fixed", "goodput"):
             raise ValueError(f"unknown mode {self.mode!r}; "
                              "expected 'fixed' or 'goodput'")
@@ -334,10 +391,19 @@ class ExperimentRunner:
             return (self.calibration,)
         return tuple(self.calibration)
 
+    def _fleet_axis(self) -> Tuple[Optional[str], ...]:
+        if self.fleet is None:
+            return (None,)
+        if isinstance(self.fleet, str):
+            return (self.fleet,)
+        return tuple(self.fleet)
+
     def _norm_tenants(self) -> Optional[List]:
         """JSON-able tenant entries for cell specs: names stay strings
         (legacy golden cells keep their exact spec), rich entries become
-        [name, share, shape] lists."""
+        [name, share, shape] lists — widened to [name, share, shape,
+        model] ONLY for entries that carry a model tag, so pre-fleet
+        golden specs stay byte-identical."""
         if self.tenants is None:
             return None
         out: List = []
@@ -345,10 +411,14 @@ class ExperimentRunner:
             if isinstance(e, str):
                 out.append(e)
             else:
-                seq = list(e) + [None] * (3 - len(e))
-                out.append([seq[0],
-                            None if seq[1] is None else float(seq[1]),
-                            seq[2]])
+                width = 4 if len(e) > 3 else 3
+                seq = list(e) + [None] * (width - len(e))
+                row = [seq[0],
+                       None if seq[1] is None else float(seq[1]),
+                       seq[2]]
+                if width == 4:
+                    row.append(seq[3])
+                out.append(row)
         return out
 
     def _seed_extra(self, n: int, tp_pair: Tuple[int, int]) -> str:
@@ -368,7 +438,12 @@ class ExperimentRunner:
                     share = "" if len(seq) < 2 or seq[1] is None \
                         else f"{float(seq[1]):g}"
                     shape = seq[2] if len(seq) > 2 and seq[2] else ""
-                    enc.append(f"{seq[0]}:{share}:{shape}")
+                    key = f"{seq[0]}:{share}:{shape}"
+                    if len(seq) > 3 and seq[3]:
+                        # model tag appended only for 4-field entries:
+                        # 3-field entries keep their pre-fleet seeds
+                        key += f":{seq[3]}"
+                    enc.append(key)
             parts.append("tenants=" + "+".join(enc))
         if len(self._instance_counts()) > 1:
             parts.append(f"n={n}")
@@ -418,13 +493,21 @@ class ExperimentRunner:
                             for ctrl in self._autoscale_axis():
                               for fv in self._faults_axis():
                                 for cal in self._calibration_axis():
+                                  for fl in self._fleet_axis():
+                                    # fleet cells seed under the constant
+                                    # label "fleet": every router variant
+                                    # replays identical arrivals, so
+                                    # routing deltas isolate the policy
+                                    seed_label = ("fleet"
+                                                  if self.fleet is not None
+                                                  else strat)
                                     cell = {**common, "strategy": strat,
                                             "scenario": scen, "rate": rate,
                                             "n_instances": n,
                                             "tp": t, "pp": p,
                                             "seed": cell_seed(
-                                                self.base_seed, strat, scen,
-                                                rate,
+                                                self.base_seed, seed_label,
+                                                scen, rate,
                                                 extra=self._seed_extra(
                                                     n, (t, p)))}
                                     if self.autoscale is not None:
@@ -441,6 +524,10 @@ class ExperimentRunner:
                                         # ditto: calibrated vs analytic
                                         # cells share arrivals by design
                                         cell["calibration"] = cal
+                                    if self.fleet is not None:
+                                        # ditto: every fleet spec variant
+                                        # shares arrivals by design
+                                        cell["fleet"] = fl
                                     out.append(cell)
         return out
 
@@ -496,6 +583,10 @@ class ExperimentRunner:
             meta.pop("calibration")
         else:
             meta["calibration"] = list(self._calibration_axis())
+        if self.fleet is None:          # and for the fleet axis
+            meta.pop("fleet")
+        else:
+            meta["fleet"] = list(self._fleet_axis())
         if self.phases is None:
             meta.pop("phases")
         if not isinstance(self.n_instances, int):
@@ -530,15 +621,16 @@ class ExperimentRunner:
         each other: a ``tp`` sweep keys ``"tp{T}pp{P}"``, an
         ``n_instances`` sweep keys the count, an ``autoscale`` sweep keys
         the controller spec (``"static"`` for None), a ``faults`` sweep
-        keys the fault spec (``"none"`` for None), and a ``calibration``
-        sweep keys the report path (``"analytic"`` for None), in that
-        order."""
+        keys the fault spec (``"none"`` for None), a ``calibration``
+        sweep keys the report path (``"analytic"`` for None), and a
+        ``fleet`` sweep keys the fleet spec string, in that order."""
         cells = results["cells"]
         multi_n = len({c.get("n_instances") for c in cells}) > 1
         multi_tp = len({(c.get("tp"), c.get("pp")) for c in cells}) > 1
         multi_as = len({c.get("autoscale") for c in cells}) > 1
         multi_f = len({c.get("faults") for c in cells}) > 1
         multi_cal = len({c.get("calibration") for c in cells}) > 1
+        multi_fl = len({c.get("fleet") for c in cells}) > 1
         out: Dict[str, Dict[str, Dict]] = {}
         for cell in cells:
             leaf = cell.get("metrics", cell)
@@ -553,6 +645,8 @@ class ExperimentRunner:
                 keys.append(cell.get("faults") or "none")
             if multi_cal:
                 keys.append(cell.get("calibration") or "analytic")
+            if multi_fl:
+                keys.append(cell.get("fleet") or "none")
             if cell.get("mode") != "goodput":
                 keys.append(cell["rate"])
             node = out.setdefault(cell["strategy"], {})
@@ -599,10 +693,17 @@ def goodput_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
     The strategy rows cover all four paper baselines (sarathi/distserve
     joined in PR 5) and the shapes cover all four rate-parameterized
     arrival processes — per-cell CRC seeds mean the widened grid keeps
-    every pre-existing cell's metrics bit-exact."""
+    every pre-existing cell's metrics bit-exact.
+
+    The ROADMAP composition sweep rides the same frontier:
+    ``distserve+priority`` (EDF queue + backpressure admission on FuDG)
+    and ``ecoserve+spf`` (shortest-prompt-first on PaDG) probe whether
+    either composed policy Pareto-dominates its base across the shapes
+    (notes in benchmarks/README.md)."""
     return ExperimentRunner(
         strategies=("ecoserve", "vllm", "sarathi", "distserve",
-                    "mooncake", "vllm+priority"),
+                    "mooncake", "vllm+priority",
+                    "distserve+priority", "ecoserve+spf"),
         scenarios=("poisson", "bursty", "diurnal", "ramp"),
         mode="goodput", target_attainment=0.9,
         goodput_lo=1.0, goodput_hi=24.0, goodput_tol=0.35,
@@ -717,6 +818,44 @@ def interconnect_runner(n_workers: Optional[int] = None
         phases=4,
         model="llama-30b", hw="L20", tp=4, pp=1, n_instances=4,
         workload="sharegpt", duration=48.0, warmup=6.0,
+        base_seed=42, n_workers=n_workers)
+
+
+def fleet_grid_runner(n_workers: Optional[int] = None) -> ExperimentRunner:
+    """The canonical multi-model fleet grid (repro.fleet); pinned
+    bit-exactly by tests/golden/fleet_grid.json.
+
+    Two model pools — a qwen1.5-32b "chat" pool and a llama-30b "code"
+    pool, both EcoServe stacks — share a 24-GPU budget.  Two tenant
+    streams with opposite mid-run mix shifts (``shift:4,1`` vs
+    ``shift:1,4``, model-tagged) swap which pool carries the load
+    halfway through, while every router x rebalance cell replays the
+    IDENTICAL arrival sequence (fleet cells seed under the constant
+    label "fleet").  The surging tenant (longbench) rides the SMALLER
+    model, so quality-tiered routing may legally spill its breaching
+    requests up-tier into the draining qwen pool — the grid separates
+    what routing alone recovers from what capacity movement recovers.
+
+    The claims the golden pins: the static partition strands capacity
+    on the wrong side of the shift — its min-over-pools attainment
+    collapses in the post-shift phases — while budget-constrained
+    rebalancing moves instances from the draining pool to the filling
+    one and holds ``attainment_pool_min`` STRICTLY above the static
+    cell's, under every routing policy, without ever exceeding the
+    budget or emptying a pool; and quality-tiered spillover lifts the
+    static floor well above pinned's even before any capacity moves."""
+    return ExperimentRunner(
+        strategies=("pinned", "cheapest-feasible", "quality-tiered"),
+        scenarios=("poisson",),
+        rates=(6.0,),
+        tenants=(("sharegpt", 0.5, "shift:4,1", "qwen1.5-32b"),
+                 ("longbench", None, "shift:1,4", "llama-30b")),
+        fleet="chat=qwen1.5-32b/ecoserve/4,code=llama-30b/ecoserve/2"
+              ";budget=24",
+        autoscale=(None, "rebalance"),
+        phases=4,
+        model="llama-30b", hw="L20", tp=4, pp=1,
+        duration=48.0, warmup=6.0,
         base_seed=42, n_workers=n_workers)
 
 

@@ -124,6 +124,40 @@ class DiurnalArrivals(ArrivalProcess):
 
 
 @dataclasses.dataclass(frozen=True)
+class PhasedArrivals(ArrivalProcess):
+    """Piecewise-stationary Poisson over equal windows: the horizon is
+    split into ``len(weights)`` phases and phase k runs at
+    ``rate * weights[k] / mean(weights)`` — so the time-averaged rate
+    stays ``rate`` while the *mix* of a multi-tenant scenario shifts at
+    phase boundaries (tenant A weighted ``(4, 1)`` against tenant B's
+    ``(1, 4)`` trades places mid-run at the same total load).  Windows
+    are sampled in order from the one RNG stream, exactly like the
+    bursty process samples its phases."""
+    rate: float
+    weights: Tuple[float, ...] = (1.0,)
+
+    def __post_init__(self):
+        if not self.weights or any(w < 0 for w in self.weights) \
+                or sum(self.weights) <= 0:
+            raise ValueError(f"shift weights must be non-negative with a "
+                             f"positive sum, got {self.weights}")
+
+    def sample(self, rng, duration):
+        mean_w = sum(self.weights) / len(self.weights)
+        k = len(self.weights)
+        pieces: List[np.ndarray] = []
+        for i, w in enumerate(self.weights):
+            t0 = duration * i / k
+            t1 = duration * (i + 1) / k
+            n = rng.poisson(self.rate * (w / mean_w) * (t1 - t0))
+            if n:
+                pieces.append(t0 + np.sort(rng.random(n)) * (t1 - t0))
+        if not pieces:
+            return np.empty(0)
+        return np.concatenate(pieces)
+
+
+@dataclasses.dataclass(frozen=True)
 class RampArrivals(ArrivalProcess):
     """Linear ramp from ``lo_frac*rate`` to ``hi_frac*rate`` over the
     horizon; defaults keep the time-averaged rate at ``rate``."""
@@ -177,10 +211,13 @@ class Scenario:
 class TenantSpec:
     """One tenant stream inside a ``MixedScenario``: its SLO-class tag,
     length distributions, and arrival process (carrying that tenant's
-    share of the total rate)."""
+    share of the total rate).  ``model`` optionally tags every request
+    of the stream with the model the tenant asks for (``repro.fleet``
+    routes on it); None keeps requests untagged."""
     slo_class: str
     profile: WorkloadProfile
     arrivals: ArrivalProcess
+    model: Optional[str] = None
 
 
 def _tenant_seed(seed: int, slo_class: str) -> int:
@@ -228,8 +265,11 @@ class MixedScenario:
 
     def generate(self, duration: float) -> List[Request]:
         single = len(self.tenants) == 1
-        merged: List[Tuple[float, int, int, str]] = []
+        merged: List[Tuple[float, int, int, str, Optional[str]]] = []
         for t in sorted(self.tenants, key=lambda t: t.slo_class):
+            # per-tenant seeds key on the CLASS TAG only — adding or
+            # changing another field (e.g. the fleet model tag) must not
+            # move any tenant's draws
             tseed = self.seed if single else \
                 _tenant_seed(self.seed, t.slo_class)
             rng = np.random.default_rng(tseed)
@@ -238,30 +278,35 @@ class MixedScenario:
             ins = t.profile.input_dist.sample(rng, n)
             outs = t.profile.output_dist.sample(rng, n)
             merged.extend(
-                (float(times[i]), int(ins[i]), int(outs[i]), t.slo_class)
+                (float(times[i]), int(ins[i]), int(outs[i]), t.slo_class,
+                 t.model)
                 for i in range(n))
         # stable sort of class-ordered streams == deterministic k-way
         # merge; rids are assigned in merged arrival order
         merged.sort(key=lambda rec: rec[0])
         return [
             Request(rid=i, arrival_time=at, prompt_len=p, output_len=o,
-                    slo_class=c)
-            for i, (at, p, o, c) in enumerate(merged)
+                    slo_class=c, model=m)
+            for i, (at, p, o, c, m) in enumerate(merged)
         ]
 
 
-def _norm_tenant_entry(entry) -> Tuple[str, Optional[float], Optional[str]]:
+def _norm_tenant_entry(entry) -> Tuple[str, Optional[float],
+                                       Optional[str], Optional[str]]:
     """``"alpaca"`` | ``("alpaca", 0.7)`` | ``("alpaca", 0.7, "bursty")``
-    -> (workload name, share or None, arrival shape or None)."""
+    | ``("alpaca", 0.7, "bursty", "llama-30b")``
+    -> (workload name, share or None, arrival shape or None,
+    model tag or None)."""
     if isinstance(entry, str):
-        return entry, None, None
+        return entry, None, None, None
     seq = tuple(entry)
     if not seq or not isinstance(seq[0], str):
         raise TypeError(f"tenant entry {entry!r}: expected a workload "
-                        "name or (name, share[, shape])")
+                        "name or (name, share[, shape[, model]])")
     share = float(seq[1]) if len(seq) > 1 and seq[1] is not None else None
     shape = seq[2] if len(seq) > 2 and seq[2] else None
-    return seq[0], share, shape
+    model = seq[3] if len(seq) > 3 and seq[3] else None
+    return seq[0], share, shape, model
 
 
 def make_mixed_scenario(kind: str, tenant_workloads: Sequence,
@@ -273,24 +318,28 @@ def make_mixed_scenario(kind: str, tenant_workloads: Sequence,
     per-class budgets) and its lengths come from that workload's profile.
 
     Entries are workload names (equal share of ``rate``, the cell's
-    ``kind`` as arrival shape) or ``(name, share[, shape])`` tuples
-    pinning that tenant's fraction of the total rate and, optionally, its
-    own arrival shape — e.g. bursty alpaca over diurnal longbench:
-    ``(("alpaca", 0.7, "bursty"), ("longbench", 0.3, "diurnal"))``.
+    ``kind`` as arrival shape) or ``(name, share[, shape[, model]])``
+    tuples pinning that tenant's fraction of the total rate and,
+    optionally, its own arrival shape and fleet model tag — e.g. bursty
+    alpaca over diurnal longbench:
+    ``(("alpaca", 0.7, "bursty"), ("longbench", 0.3, "diurnal"))``, or a
+    shifting two-model fleet mix:
+    ``(("sharegpt", 0.5, "shift:4,1", "llama-30b"),
+    ("longbench", None, "shift:1,4", "qwen1.5-32b"))``.
     Entries without an explicit share split the unclaimed remainder
     equally.  Per-tenant RNG streams are seeded by tenant *identity*
-    either way, so adding a share/shape to one tenant never moves
+    either way, so adding a share/shape/model to one tenant never moves
     another tenant's draws."""
     entries = [_norm_tenant_entry(e) for e in tenant_workloads]
     if shares is not None:
         if len(shares) != len(entries):
             raise ValueError("one share per tenant workload")
-        entries = [(n, float(s), sh)
-                   for (n, _, sh), s in zip(entries, shares)]
-    claimed = sum(s for _, s, _ in entries if s is not None)
+        entries = [(n, float(s), sh, m)
+                   for (n, _, sh, m), s in zip(entries, shares)]
+    claimed = sum(s for _, s, _, _ in entries if s is not None)
     if claimed > 1.0 + 1e-9:
         raise ValueError(f"tenant shares sum to {claimed} > 1")
-    unspec = sum(1 for _, s, _ in entries if s is None)
+    unspec = sum(1 for _, s, _, _ in entries if s is None)
     if not unspec and abs(claimed - 1.0) > 1e-9:
         # all-explicit shares must cover the rate: a silent shortfall
         # would label result rows with an offered load nobody simulated
@@ -299,7 +348,7 @@ def make_mixed_scenario(kind: str, tenant_workloads: Sequence,
                          "remainder")
     default_share = (1.0 - claimed) / unspec if unspec else 0.0
     tenants = []
-    for name, share, shape in entries:
+    for name, share, shape, model in entries:
         share = default_share if share is None else share
         scen = make_scenario(shape or kind, name, rate * share,
                              seed=seed, **kw)
@@ -307,8 +356,8 @@ def make_mixed_scenario(kind: str, tenant_workloads: Sequence,
             raise TypeError(f"kind {shape or kind!r} does not parameterize "
                             "by rate and cannot form a tenant stream")
         tenants.append(TenantSpec(slo_class=name, profile=scen.profile,
-                                  arrivals=scen.arrivals))
-    names = [n for n, _, _ in entries]
+                                  arrivals=scen.arrivals, model=model))
+    names = [n for n, _, _, _ in entries]
     return MixedScenario(name=f"{kind}+{'+'.join(names)}",
                          tenants=tuple(tenants), seed=seed)
 
@@ -317,14 +366,15 @@ def make_mixed_scenario(kind: str, tenant_workloads: Sequence,
 # JSONL traces
 # --------------------------------------------------------------------- #
 
-# (arrival_time, prompt_len, output_len, slo_class)
-TraceRecord = Tuple[float, int, int, str]
+# (arrival_time, prompt_len, output_len, slo_class, model-or-None)
+TraceRecord = Tuple[float, int, int, str, Optional[str]]
 
 
 def trace_lines(reqs: Iterable[Request]) -> List[str]:
-    """One JSONL record per request.  The ``slo_class`` key is written
-    only for tagged (non-default) requests, so single-tenant traces stay
-    byte-identical to the legacy three-key format."""
+    """One JSONL record per request.  The ``slo_class`` and ``model``
+    keys are written only for tagged requests, so single-tenant,
+    untagged traces stay byte-identical to the legacy three-key
+    format."""
     out: List[str] = []
     for r in reqs:
         d = {"arrival_time": r.arrival_time,
@@ -332,6 +382,8 @@ def trace_lines(reqs: Iterable[Request]) -> List[str]:
              "output_len": r.output_len}
         if r.slo_class != DEFAULT_SLO_CLASS:
             d["slo_class"] = r.slo_class
+        if r.model is not None:
+            d["model"] = r.model
         out.append(json.dumps(d))
     return out
 
@@ -350,10 +402,12 @@ def _parse_trace(lines: Iterable[str]) -> Tuple[TraceRecord, ...]:
         if not line:
             continue
         d = json.loads(line)
+        model = d.get("model")
         records.append((float(d["arrival_time"]), int(d["prompt_len"]),
                         int(d["output_len"]),
                         # untagged legacy JSONL loads as the default class
-                        str(d.get("slo_class", DEFAULT_SLO_CLASS))))
+                        str(d.get("slo_class", DEFAULT_SLO_CLASS)),
+                        None if model is None else str(model)))
     return tuple(records)
 
 
@@ -396,13 +450,13 @@ class TraceReplay:
         rid = 0
         for k in range(passes):
             off = k * stride
-            for t, plen, olen, cls in self.records:
+            for t, plen, olen, cls, model in self.records:
                 t = t + off
                 if duration is not None and t >= duration:
                     continue
                 reqs.append(Request(rid=rid, arrival_time=t,
                                     prompt_len=plen, output_len=olen,
-                                    slo_class=cls))
+                                    slo_class=cls, model=model))
                 rid += 1
         return reqs
 
@@ -462,6 +516,10 @@ def make_scenario(kind: str, profile: Union[str, WorkloadProfile],
     ``profile`` and ``seed`` do not perturb it (lengths come from the
     trace; the rate knob is a pure time dilation), but grids can still
     sweep rates over real traffic shapes.
+    ``kind='shift:<w0>,<w1>[,...]'`` runs piecewise-stationary Poisson
+    phases weighted by the listed factors (``PhasedArrivals``; the
+    time-averaged rate stays ``rate``) — per-tenant shift shapes are how
+    a fleet cell's traffic mix moves between models mid-run.
     """
     if kind.startswith("trace:"):
         if kw:
@@ -471,6 +529,11 @@ def make_scenario(kind: str, profile: Union[str, WorkloadProfile],
         return fixture_replay(kind[len("trace:"):], rate=rate, loop=True)
     if isinstance(profile, str):
         profile = WORKLOADS[profile]
+    if kind.startswith("shift:"):
+        if kw:
+            raise TypeError(f"shift kinds take no extra options, got {kw}")
+        weights = tuple(float(x) for x in kind[len("shift:"):].split(","))
+        return Scenario(kind, profile, PhasedArrivals(rate, weights), seed)
     if kind == "poisson":
         if kw:
             raise TypeError(f"poisson takes no extra options, got {kw}")

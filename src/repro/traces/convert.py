@@ -9,9 +9,12 @@ Two public schemas, the ones DistServe/DynaServe-style evaluations use:
   Response tokens,Total tokens,Log Type`` with numeric second stamps.
 
 Both convert to the repo's trace-record dicts —
-``{"arrival_time", "prompt_len", "output_len"[, "slo_class"]}`` — with
-arrival times shifted so the first request lands at 0.0 and rows sorted
-by arrival.  Records serialize to the same JSONL that
+``{"arrival_time", "prompt_len", "output_len"[, "slo_class"][, "model"]}``
+— with arrival times shifted so the first request lands at 0.0 and rows
+sorted by arrival.  BurstGPT rows keep the raw upstream model name in
+``"model"`` (the fleet router routes on it) independently of the
+SLO-class mapping; records without the field serialize byte-identically
+to the legacy three/four-key schema.  Records serialize to the same JSONL that
 ``TraceReplay.from_jsonl`` replays, so a converted trace drives any
 simulation cell.  Rows with non-positive context tokens are dropped
 (aborted requests); zero generated tokens clamp to 1 (the simulator
@@ -122,6 +125,11 @@ def convert_burstgpt(lines: Iterable[str],
             tag = BURSTGPT_CLASS_BY_MODEL.get((rec["Model"] or "").strip())
         if tag:
             row["slo_class"] = tag
+        model = (rec["Model"] or "").strip()
+        if model:
+            # raw upstream model name, preserved independently of the
+            # class mapping: the fleet router keys pools on it
+            row["model"] = model
         rows.append(row)
     return _finish(rows)
 
@@ -139,6 +147,8 @@ def records_to_jsonl(records: Iterable[TraceDict]) -> List[str]:
              "output_len": r["output_len"]}
         if r.get("slo_class"):
             d["slo_class"] = r["slo_class"]
+        if r.get("model"):
+            d["model"] = r["model"]
         out.append(json.dumps(d))
     return out
 

@@ -1,0 +1,99 @@
+"""Golden regression layer for the fleet subsystem.
+
+``tests/golden/fleet_grid.json`` pins the canonical routing x
+rebalancing grid bit-exactly AND the paper-level ordering claims it
+demonstrates: under a mid-run mix shift, budget-constrained rebalancing
+strictly beats the static partition on min-over-pools attainment under
+every routing policy, and quality-tiered spillover lifts the static
+floor above pinned routing's before any capacity moves.  Regenerate
+(after an *intentional* change) with:
+
+    PYTHONPATH=src python -m benchmarks.bench_fleet --write-golden
+"""
+import json
+import pathlib
+
+from repro.simulator.runner import ExperimentRunner, fleet_grid_runner
+
+GOLDEN = pathlib.Path(__file__).parent / "golden" / "fleet_grid.json"
+
+
+def _grid(results):
+    meta = results["meta"]
+    return (ExperimentRunner.grid(results), meta["strategies"],
+            meta["scenarios"][0], meta["rates"][0])
+
+
+def test_fleet_golden_grid_reproduced_bit_exactly():
+    golden = ExperimentRunner.load(GOLDEN)
+    fresh = fleet_grid_runner(n_workers=2).run()
+    assert not fresh.get("errors"), fresh.get("errors")
+    assert fresh["meta"] == golden["meta"], \
+        "fleet grid spec drifted from the golden fixture"
+    want = json.dumps(golden["cells"], sort_keys=True)
+    got = json.dumps(fresh["cells"], sort_keys=True)
+    assert got == want, (
+        "fleet grid no longer reproduces the golden metrics; if the "
+        "change is intentional, regenerate with `python -m "
+        "benchmarks.bench_fleet --write-golden` and review the diff")
+
+
+def test_fleet_cells_share_one_seed_and_cover_the_grid():
+    golden = ExperimentRunner.load(GOLDEN)
+    cells = golden["cells"]
+    assert len(cells) == 6
+    assert len({c["seed"] for c in cells}) == 1, (
+        "fleet cells must replay identical arrivals across routers and "
+        "control levels")
+    assert {c["strategy"] for c in cells} == \
+        {"pinned", "cheapest-feasible", "quality-tiered"}
+    assert {c.get("autoscale") for c in cells} == {None, "rebalance"}
+    for c in cells:
+        assert [p["name"] for p in c["system"]["pools"]] == ["chat", "code"]
+
+
+def test_rebalancing_strictly_beats_static_partition_in_golden():
+    grid, routers, scen, rate = _grid(ExperimentRunner.load(GOLDEN))
+    floors = {}
+    for router in routers:
+        static = grid[router][scen]["static"][rate]["attainment_pool_min"]
+        rebal = grid[router][scen]["rebalance"][rate]["attainment_pool_min"]
+        floors[router] = static
+        assert rebal > static, (
+            f"{router}: rebalanced min-over-pools attainment "
+            f"{rebal:.4f} must strictly beat the static partition's "
+            f"{static:.4f}")
+    # routing alone also helps: spillover lifts the static floor
+    assert floors["quality-tiered"] > floors["pinned"]
+
+
+def test_quality_tiered_golden_cells_actually_spill():
+    grid, _, scen, rate = _grid(ExperimentRunner.load(GOLDEN))
+    pinned = grid["pinned"][scen]["static"][rate]["fleet"]["routed"]
+    tiered = grid["quality-tiered"][scen]["static"][rate]["fleet"]["routed"]
+    assert sum(pinned.values()) == sum(tiered.values()), (
+        "identical arrivals must reach both routers")
+    assert tiered["chat"] > pinned["chat"], (
+        "quality-tiered routing never spilled the surging tenant "
+        "up-tier into the chat pool")
+
+
+def test_golden_trajectories_honor_budget_and_floor():
+    golden = ExperimentRunner.load(GOLDEN)
+    rebalanced = [c for c in golden["cells"] if c.get("autoscale")]
+    assert rebalanced, "golden grid lost its rebalanced cells"
+    for cell in rebalanced:
+        tl = cell["metrics"]["timeline"]
+        devices = {p["name"]: p["devices_per_instance"]
+                   for p in cell["system"]["pools"]}
+        trajs = {name: ptl["trajectory"]
+                 for name, ptl in tl["per_pool"].items()}
+        assert {len(t) for t in trajs.values()} != set(), \
+            "rebalanced cell recorded no trajectory"
+        for i in range(min(len(t) for t in trajs.values())):
+            committed = sum(trajs[n][i]["n_target"] * devices[n]
+                            for n in trajs)
+            assert committed <= tl["budget"]
+            assert all(trajs[n][i]["n_target"] >= 1 for n in trajs)
+        # the rebalancer actually acted on the shift in every cell
+        assert tl["n_ups"] + tl["n_moves"] + tl["n_downs"] > 0

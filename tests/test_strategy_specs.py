@@ -109,6 +109,17 @@ def test_registered_composition_and_grammar_agree():
     assert reg.queue == "slo-priority"
     assert reg.admission == "backpressure"
     assert reg.base == "vllm"
+    # ROADMAP composition sweep: the registered bundles must be exactly
+    # what the grammar would compose (policy slots and frozen kwargs)
+    reg = REGISTRY["distserve+priority"]
+    assert (reg.base, reg.queue, reg.admission) == \
+        ("distserve", "slo-priority", "backpressure")
+    assert reg.ctor_kwargs == {"prefill_ratio": 0.25}
+    reg = REGISTRY["ecoserve+spf"]
+    assert (reg.base, reg.queue, reg.admission) == \
+        ("ecoserve", "shortest-prompt", None)
+    assert describe_strategy("ecoserve+spf")["admission"] == \
+        "timeout-forced:4"
 
 
 def test_grammar_composes_unregistered_variants():

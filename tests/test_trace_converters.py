@@ -59,6 +59,7 @@ def check_jsonl_roundtrip_lossless(records) -> None:
         assert req.prompt_len == rec["prompt_len"]
         assert req.output_len == rec["output_len"]
         assert req.slo_class == rec.get("slo_class", "default")
+        assert req.model == rec.get("model")
 
 
 def check_rate_normalization(records, target) -> None:
@@ -166,6 +167,43 @@ def test_burstgpt_converter_tags_by_model_when_asked():
     assert all("slo_class" not in r for r in untagged)
     pinned = convert_burstgpt(BURSTGPT_CSV, slo_class="alpaca")
     assert {r["slo_class"] for r in pinned} == {"alpaca"}
+
+
+def test_burstgpt_converter_preserves_raw_model_names():
+    recs = convert_burstgpt(BURSTGPT_CSV)
+    assert [r["model"] for r in recs] == ["ChatGPT", "ChatGPT", "GPT-4"]
+    # the raw name rides alongside (not instead of) the class mapping
+    tagged = convert_burstgpt(BURSTGPT_CSV, class_by_model=True)
+    assert [(r["slo_class"], r["model"]) for r in tagged] == \
+        [("sharegpt", "ChatGPT"), ("sharegpt", "ChatGPT"),
+         ("longbench", "GPT-4")]
+    # and survives JSONL -> TraceReplay -> Request for the fleet router
+    replay = TraceReplay("m", _parse_trace(records_to_jsonl(recs)))
+    assert [q.model for q in replay.generate()] == \
+        ["ChatGPT", "ChatGPT", "GPT-4"]
+
+
+def test_legacy_records_round_trip_byte_identically():
+    # pre-fleet records (no "model") must serialize to the exact legacy
+    # schema: no new key may appear on the wire
+    legacy = _records([(1.0, 10, 5, "alpaca"), (2.0, 20, 6, None)])
+    lines = records_to_jsonl(legacy)
+    assert all("model" not in line for line in lines)
+    assert records_to_jsonl(_parse_and_redump(lines)) == lines
+
+
+def _parse_and_redump(lines):
+    """JSONL -> parsed tuples -> converter-shaped dicts (the round-trip
+    a re-export of a downloaded trace performs)."""
+    out = []
+    for t, p, o, cls, model in _parse_trace(lines):
+        rec = {"arrival_time": t, "prompt_len": p, "output_len": o}
+        if cls != "default":
+            rec["slo_class"] = cls
+        if model is not None:
+            rec["model"] = model
+        out.append(rec)
+    return out
 
 
 def test_converters_reject_wrong_schema():
