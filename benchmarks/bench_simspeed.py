@@ -23,6 +23,12 @@ the host's interpreter speed rather than absolute wall clock — a slow CI
 runner doesn't trip it, and a fast one doesn't mask regressions.
 ``--write-baseline`` re-measures and rewrites the baseline JSON (do this
 after an intentional perf change, and commit the diff).
+
+``--smoke`` additionally gates the flight recorder's tracing overhead
+(``repro.obs``): the smoke cell runs once plain and once traced in the
+same process, and the run fails when tracing costs more than
+``--max-tracing-overhead`` (default 1.15 = 15%).  The measured factor is
+recorded under ``"tracing"`` in the baseline JSON for reference.
 """
 from __future__ import annotations
 
@@ -91,6 +97,47 @@ def run_smoke(repeats: int) -> dict:
     return measure([_smoke_spec()], repeats)
 
 
+def run_smoke_traced(repeats: int) -> dict:
+    """The smoke cell with the flight recorder attached (in-memory
+    capture) — the numerator of the tracing-overhead gate."""
+    return measure([{**_smoke_spec(), "trace": True}], repeats)
+
+
+def measure_tracing(repeats: int) -> dict:
+    """Tracing overhead factor: plain vs traced smoke cell.  The two
+    variants are timed in interleaved pairs (plain, traced, plain, ...)
+    and each takes its best, so clock-speed drift between measurement
+    blocks cancels instead of masquerading as overhead."""
+    import gc
+    plain_spec = _smoke_spec()
+    traced_spec = {**plain_spec, "trace": True}
+    sim_seconds = plain_spec["duration"]
+    best = [float("inf"), float("inf")]
+    # GC pauses land disproportionately on the traced variant (it
+    # allocates the event list); collect between runs and disable the
+    # collector inside the timed region so the gate measures the
+    # recorder's algorithmic cost, not collector scheduling luck
+    was_enabled = gc.isenabled()
+    try:
+        for _ in range(max(6, 2 * repeats)):
+            for i, spec in enumerate((plain_spec, traced_spec)):
+                gc.collect()
+                gc.disable()
+                t0 = time.perf_counter()
+                _run_cell(spec)
+                best[i] = min(best[i], time.perf_counter() - t0)
+                gc.enable()
+    finally:
+        if was_enabled:
+            gc.enable()
+    plain, traced = (sim_seconds / b for b in best)
+    return {
+        "plain_sim_s_per_wall_s": round(plain, 2),
+        "traced_sim_s_per_wall_s": round(traced, 2),
+        "overhead_x": round(plain / traced, 4),
+    }
+
+
 def write_baseline(repeats: int) -> None:
     result = {
         "host": {"machine": platform.machine(),
@@ -98,6 +145,7 @@ def write_baseline(repeats: int) -> None:
         "calibration_seconds": round(_calibration(), 4),
         "smoke": run_smoke(repeats),
         "grid": run_grid(repeats),
+        "tracing": measure_tracing(repeats),
     }
     BASELINE_PATH.write_text(json.dumps(result, indent=1, sort_keys=True)
                              + "\n")
@@ -105,7 +153,8 @@ def write_baseline(repeats: int) -> None:
     print(json.dumps(result, indent=1, sort_keys=True))
 
 
-def check_smoke(max_regression: float, repeats: int) -> int:
+def check_smoke(max_regression: float, repeats: int,
+                max_tracing_overhead: float = 1.15) -> int:
     if not BASELINE_PATH.exists():
         print(f"no baseline at {BASELINE_PATH}; run --write-baseline first",
               file=sys.stderr)
@@ -127,6 +176,19 @@ def check_smoke(max_regression: float, repeats: int) -> int:
         print("FAIL: simulator smoke cell regressed beyond the limit",
               file=sys.stderr)
         return 1
+    # tracing-overhead gate: the flight recorder's zero-overhead-when-off
+    # contract is checked by the plain run above; this bounds the cost
+    # when it is ON.  Measured live (plain vs traced, same process), so
+    # no host normalization is needed.
+    tr = measure_tracing(repeats)
+    print(f"tracing: {tr['plain_sim_s_per_wall_s']:.1f} -> "
+          f"{tr['traced_sim_s_per_wall_s']:.1f} sim-s/wall-s "
+          f"(overhead x{tr['overhead_x']:.3f}, "
+          f"limit x{max_tracing_overhead:.2f})")
+    if tr["overhead_x"] > max_tracing_overhead:
+        print("FAIL: flight-recorder tracing overhead beyond the limit",
+              file=sys.stderr)
+        return 1
     print("OK")
     return 0
 
@@ -139,6 +201,9 @@ def main(argv=None) -> int:
                     help=f"re-measure and rewrite {BASELINE_PATH.name}")
     ap.add_argument("--max-regression", type=float, default=2.0,
                     help="--smoke fails beyond this slowdown factor")
+    ap.add_argument("--max-tracing-overhead", type=float, default=1.15,
+                    help="--smoke fails when the traced smoke cell runs "
+                         "more than this factor slower than the plain one")
     ap.add_argument("--repeats", type=int, default=3,
                     help="best-of-N timing repeats")
     args = ap.parse_args(argv)
@@ -146,7 +211,8 @@ def main(argv=None) -> int:
         write_baseline(args.repeats)
         return 0
     if args.smoke:
-        return check_smoke(args.max_regression, args.repeats)
+        return check_smoke(args.max_regression, args.repeats,
+                           args.max_tracing_overhead)
     result = run_grid(args.repeats)
     print(json.dumps(result, indent=1, sort_keys=True))
     return 0

@@ -1,0 +1,190 @@
+"""Flight-recorder smoke: traced EcoServe bursty cell, TTFT attribution,
+Perfetto export.
+
+Runs the regression grid's ecoserve/bursty cell (the same spec
+``tests/test_scenarios.py`` pins bit-exactly) with the flight recorder
+attached, then proves the observability contract end to end:
+
+* the per-request TTFT attribution components
+  (``queue_wait + prefill_wait + prefill_service + transfer``) sum
+  *bit-exactly* to each request's measured TTFT — the invariant pinned
+  by ``tests/golden/trace_attribution.json``;
+* the JSONL trace round-trips through ``repro.obs.export`` and renders
+  to Chrome-trace/Perfetto JSON (load it at https://ui.perfetto.dev);
+* the trace axis is seed-neutral: the traced cell's metrics are
+  compared against the untraced run of the identical spec.
+
+    PYTHONPATH=src python -m benchmarks.bench_trace --smoke
+    PYTHONPATH=src python -m benchmarks.bench_trace --smoke --out trace_out
+    PYTHONPATH=src python -m benchmarks.bench_trace --write-golden
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from benchmarks.common import emit
+from repro.obs.export import read_jsonl, write_chrome_trace
+from repro.obs.metrics import attribution, interference, summarize
+from repro.simulator.runner import _run_cell, regression_runner
+
+GOLDEN_PATH = (pathlib.Path(__file__).resolve().parent.parent
+               / "tests" / "golden" / "trace_attribution.json")
+
+# the golden pins this many leading attribution rows (full precision
+# would bloat the fixture; the exactness invariant covers every row)
+GOLDEN_ROWS = 12
+_ROUND = 9
+
+
+def smoke_spec(trace_path=None) -> dict:
+    """The regression grid's ecoserve/bursty cell, optionally traced.
+    Using the grid's own spec keeps the seed (``cell_seed``) and every
+    parameter bit-identical to the golden-pinned cell."""
+    for spec in regression_runner(n_workers=1).cells():
+        if spec["strategy"] == "ecoserve" and spec["scenario"] == "bursty":
+            if trace_path is not None:
+                spec = {**spec, "trace": str(trace_path)}
+            return spec
+    raise RuntimeError("regression grid lost its ecoserve/bursty cell")
+
+
+def _round(x):
+    if isinstance(x, float):
+        return round(x, _ROUND)
+    if isinstance(x, dict):
+        return {k: _round(v) for k, v in x.items()}
+    if isinstance(x, (list, tuple)):
+        return [_round(v) for v in x]
+    return x
+
+
+def golden_payload(events, spec: dict) -> dict:
+    """The worker-count-invariant digest the golden pins: cell identity,
+    event counts, attribution totals + leading rows, interference.
+    Built purely from the trace events, so a 1-worker in-process run and
+    a 3-worker spawned grid must produce the identical payload."""
+    attr = attribution(events)
+    exact = all(
+        r["queue_wait"] + r["prefill_wait"] + r["prefill_service"]
+        + r["transfer"] == r["ttft"] for r in attr["rows"])
+    digest = summarize(events)
+    return {
+        "cell": {k: spec[k] for k in (
+            "strategy", "scenario", "rate", "seed", "duration", "warmup",
+            "model", "hw", "tp", "pp", "n_instances", "workload")},
+        "events": digest["by_type"],
+        "attribution": {
+            "exact": exact,
+            "n": attr["totals"]["n"],
+            "unattributed": attr["unattributed"],
+            "totals": _round(attr["totals"]),
+            "rows": _round(attr["rows"][:GOLDEN_ROWS])},
+        "interference": _round(interference(events)),
+        "tpot": _round(digest["tpot"]),
+    }
+
+
+def run_smoke(out_dir: str = "trace_out", stream: str = None) -> dict:
+    """The CI cell: trace, attribute, export, and cross-check
+    seed-neutrality against the untraced twin."""
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    trace_path = out / "ecoserve_bursty.trace.jsonl"
+
+    t0 = time.time()
+    spec = smoke_spec(trace_path)
+    row = _run_cell(spec)
+    events, _meta = read_jsonl(trace_path)
+    payload = golden_payload(events, spec)
+
+    # seed-neutrality: the traced cell's golden-visible metrics must be
+    # bit-identical to the untraced run of the same spec
+    untraced = _run_cell(smoke_spec(None))
+    assert row["metrics"] == untraced["metrics"], (
+        "tracing perturbed the metrics", row["metrics"],
+        untraced["metrics"])
+
+    assert payload["attribution"]["exact"], (
+        "TTFT attribution components must sum bit-exactly per request")
+    assert payload["attribution"]["n"] > 0, "no requests attributed"
+    assert payload["attribution"]["unattributed"] == 0, payload
+
+    perfetto_path = out / "ecoserve_bursty.perfetto.json"
+    n_render = write_chrome_trace(events, perfetto_path)
+
+    if GOLDEN_PATH.exists():
+        golden = json.loads(GOLDEN_PATH.read_text())
+        assert payload == golden, (
+            "trace attribution drifted from the pinned golden; if the "
+            "change is intentional re-run --write-golden and commit")
+
+    dt = time.time() - t0
+    print(f"\n== Flight-recorder smoke: {spec['strategy']}/"
+          f"{spec['scenario']} @ {spec['rate']} req/s ==")
+    print(f"  events: {len(events)} "
+          f"({json.dumps(payload['events'], sort_keys=True)})")
+    tot = payload["attribution"]["totals"]
+    print(f"  attribution: {tot['n']} requests, per-row exact sums, "
+          f"total ttft {tot['ttft']:.3f}s "
+          f"(queue {tot['queue_wait']:.3f} + wait "
+          f"{tot['prefill_wait']:.3f} + prefill "
+          f"{tot['prefill_service']:.3f} + transfer "
+          f"{tot['transfer']:.3f})")
+    print(f"  interference score: {payload['interference']['score']:.4f} "
+          f"(p99 stretch {payload['interference']['p99']:.3f}, "
+          f"n={payload['interference']['n']})")
+    print(f"  wrote {trace_path} ({len(events)} events) and "
+          f"{perfetto_path} ({n_render} render events)")
+    emit("trace_smoke", dt * 1e6, f"events={len(events)}")
+    if stream:
+        # one digest row into the shared CI artifact, same JSONL file
+        # the grid benches stream their cells into
+        with open(stream, "a") as fh:
+            fh.write(json.dumps({
+                "bench": "trace_smoke", "cell": payload["cell"],
+                "events": payload["events"],
+                "attribution": payload["attribution"]["totals"],
+                "interference": payload["interference"],
+            }, sort_keys=True) + "\n")
+    return {"payload": payload, "trace": str(trace_path),
+            "perfetto": str(perfetto_path)}
+
+
+def write_golden() -> None:
+    import tempfile
+    with tempfile.TemporaryDirectory() as td:
+        trace_path = pathlib.Path(td) / "cell.trace.jsonl"
+        spec = smoke_spec(trace_path)
+        _run_cell(spec)
+        events, _ = read_jsonl(trace_path)
+        payload = golden_payload(events, spec)
+    assert payload["attribution"]["exact"]
+    GOLDEN_PATH.write_text(json.dumps(payload, indent=1, sort_keys=True)
+                           + "\n")
+    print(f"wrote {GOLDEN_PATH}")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="traced CI cell + attribution + Perfetto export")
+    ap.add_argument("--out", default="trace_out",
+                    help="artifact directory for --smoke")
+    ap.add_argument("--write-golden", action="store_true",
+                    help=f"re-pin {GOLDEN_PATH.name}")
+    ap.add_argument("--stream", default=None, metavar="PATH",
+                    help="append the smoke digest row to this JSONL file")
+    args = ap.parse_args(argv)
+    if args.write_golden:
+        write_golden()
+        return 0
+    run_smoke(args.out, stream=args.stream)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

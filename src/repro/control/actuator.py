@@ -193,7 +193,11 @@ class Actuator:
             self._cancelled -= 1
             return
         self._provisioning -= 1
-        self.system.scale_up(self.engine)
+        inst = self.system.scale_up(self.engine)
+        trc = self.engine.tracer
+        if trc.enabled:
+            trc.control(self.engine.now, "commission",
+                        getattr(inst, "iid", None))
         self.system._drain_queue(self.engine.now, self.engine)
 
 
@@ -249,6 +253,10 @@ class ControlLoopHarness:
         if now < self._next_tick:
             return
         snap = self.collector.snapshot(self.system, self.engine, now)
+        trc = self.engine.tracer
+        if trc.enabled:
+            trc.control(now, "snapshot", round(snap.get("queue_depth",
+                                                        0.0), 6))
         transport = getattr(self.system, "transport", None)
         if transport is not None and transport.network is not None:
             # telemetry crosses the degraded plane: the snapshot may be
@@ -276,6 +284,8 @@ class ControlLoopHarness:
         # actually asked for; a no-op in fault-free runs
         self.actuator.repair(now, signals)
         decision = self.controller.decide(signals, self.actuator.n_target)
+        if trc.enabled:
+            trc.control(now, "decision", decision)
         if not self.actuator.apply(decision, now, signals):
             # contraction refused: the pool did not change, so the
             # controller must not sit out a cooldown for it

@@ -14,9 +14,14 @@ from repro.core.constraints import check_constraints
 from repro.core.instance import Instance
 from repro.core.request import Request
 from repro.core.slo import SLO, SLOClassSet, as_slo_class_set
+from repro.obs.events import NULL_TRACER
 
 
 class MacroInstance:
+    # flight-recorder hook: rolling-activation rotations are the paper's
+    # Fig. 5 step 2 — worth a timeline event each
+    tracer = NULL_TRACER
+
     def __init__(self, mid: int, instances: List[Instance],
                  slo: Union[SLO, SLOClassSet],
                  predict_prefill: Callable[[int], float],
@@ -60,6 +65,10 @@ class MacroInstance:
             if check_constraints(status, req, slo,
                                  self.predict_prefill, now,
                                  conservative=self.conservative):
+                if idx != self._active_idx:
+                    trc = self.tracer
+                    if trc.enabled:
+                        trc.instance(now, inst.iid, "rotate")
                 self._active_idx = idx
                 inst.admit(req, now)
                 return inst
@@ -79,7 +88,12 @@ class MacroInstance:
                    key=lambda i: i.kv_capacity_tokens - i.kv_tokens_used())
         self.rejected += 1
         inst.admit(req, now)
-        self._active_idx = self.instances.index(inst)
+        idx = self.instances.index(inst)
+        if idx != self._active_idx:
+            trc = self.tracer
+            if trc.enabled:
+                trc.instance(now, inst.iid, "rotate")
+        self._active_idx = idx
         return inst
 
     # ------------------------------------------------------------------ #

@@ -26,6 +26,7 @@ from repro.core.instance import Instance
 from repro.core.macro import MacroInstance
 from repro.core.request import Request
 from repro.core.slo import SLO, SLOClassSet, as_slo_class_set
+from repro.obs.events import NULL_TRACER
 
 # process-local registry standing in for the RPC actor table: handlers
 # resolve their instance through it after deserialization, which is what
@@ -100,6 +101,10 @@ class OverallScheduler:
     """Top-level scheduler: dispatches to macro instances and runs the
     mitosis expansion/contraction state machine."""
 
+    # flight-recorder hook; ``new_macro`` propagates it to every macro
+    # instance so rotations minted after attachment are captured too
+    tracer = NULL_TRACER
+
     def __init__(self, slo, predict_prefill: Callable[[int], float],
                  n_lower: int = 4, n_upper: int = 16,
                  conservative: bool = False, reachable=None):
@@ -139,6 +144,8 @@ class OverallScheduler:
                           reachable=self.reachable)
         self._next_mid += 1
         self.macros.append(m)
+        if self.tracer.enabled:
+            m.tracer = self.tracer
         return m
 
     def add_instance(self, inst: Instance) -> MacroInstance:
@@ -158,6 +165,9 @@ class OverallScheduler:
         seeds = [target.remove_instance() for _ in range(self.n_lower - 1)]
         seeds = [s for s in seeds if s is not None] + [inst]
         new = self.new_macro(seeds)
+        trc = self.tracer
+        if trc.enabled:
+            trc.instance(trc.now(), inst.iid, "split")
         for s in seeds[:-1]:
             self._record_migration(target.mid, new.mid, s)
         return new
@@ -203,6 +213,9 @@ class OverallScheduler:
         by_size = sorted(self.macros, key=lambda m: m.size)
         a, b = by_size[0], by_size[1]
         if a.size + b.size <= self.n_upper:
+            trc = self.tracer
+            if trc.enabled:
+                trc.instance(trc.now(), a.mid, "merge")
             # merge a into b via handler migration
             while a.size:
                 inst = a.remove_instance()

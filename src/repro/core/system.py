@@ -39,6 +39,7 @@ from repro.core.request import Request
 from repro.core.slo import SLO, SLOClassSet, as_slo_class_set
 from repro.core.transport import Transport
 from repro.faults.policies import FailurePolicy, make_failure_policy
+from repro.obs.events import NULL_TRACER, attach_decision_log
 
 
 @runtime_checkable
@@ -86,13 +87,24 @@ class PolicySystemBase:
     default_routing = "least-kv"
     default_failure = "drop"
 
-    # Optional scheduling-decision trace (sim-to-real conformance): when a
-    # caller attaches a list here, every admission outcome is appended as
-    # ("admit"|"queue"|"drain", now, rid[, iid]).  The engines log slot
-    # events into the same list, so one sequence totally orders the
-    # scheduling decisions a run makes.  None (the default) keeps the hot
-    # path allocation-free.
-    decision_log: Optional[List] = None
+    # Flight-recorder hook (repro.obs): NULL_TRACER keeps the hot path
+    # allocation-free — one attribute read per emission site.
+    tracer = NULL_TRACER
+    _decision_log: Optional[List] = None
+
+    @property
+    def decision_log(self) -> Optional[List]:
+        """Compat shim for the PR 8 scheduling-decision trace: attaching
+        a list installs it as a tracer mirror, so every admission outcome
+        is appended as ("admit"|"queue"|"drain", now, rid[, iid]) through
+        the event bus.  The engines log slot events into the same list,
+        so one sequence totally orders the scheduling decisions a run
+        makes.  None (the default) keeps the hot path allocation-free."""
+        return self._decision_log
+
+    @decision_log.setter
+    def decision_log(self, log: Optional[List]) -> None:
+        attach_decision_log(self, log)
 
     def __init__(self, cost, n_instances: int, slo=None, *,
                  queue_discipline=None, admission=None, routing=None,
@@ -162,10 +174,12 @@ class PolicySystemBase:
     # ---------------- engine hooks --------------------------------------- #
     def submit(self, req: Request, now: float, engine) -> None:
         inst = self.admission.try_admit(self, req, now)
-        if self.decision_log is not None:
-            self.decision_log.append(
-                ("admit", now, req.rid, inst.iid) if inst is not None
-                else ("queue", now, req.rid))
+        trc = self.tracer
+        if trc.enabled:
+            if inst is not None:
+                trc.admit(now, req.rid, inst.iid)
+            else:
+                trc.enqueue(now, req.rid)
         if inst is not None:
             engine.activate(inst)
         else:
@@ -209,9 +223,9 @@ class PolicySystemBase:
             tries += 1
             inst = self.admission.try_admit(self, req, now)
             if inst is not None:
-                if self.decision_log is not None:
-                    self.decision_log.append(
-                        ("drain", now, req.rid, inst.iid))
+                trc = self.tracer
+                if trc.enabled:
+                    trc.drain(now, req.rid, inst.iid)
                 engine.activate(inst)
                 admitted.add(id(req))
                 fails = 0
@@ -238,6 +252,9 @@ class PolicySystemBase:
         self._next_iid += 1
         self.instances.append(inst)
         self.routing.add_instance(self, inst)
+        trc = self.tracer
+        if trc.enabled:
+            trc.instance(trc.now(), inst.iid, "scale_up")
         return inst
 
     def scale_down(self, now: Optional[float] = None,
@@ -247,6 +264,10 @@ class PolicySystemBase:
             self.instances.remove(inst)
         if inst is not None:
             self.fault_stats["planned_removals"] += 1
+            trc = self.tracer
+            if trc.enabled:
+                trc.instance(now if now is not None else trc.now(),
+                             inst.iid, "scale_down")
             self.failure.on_planned_removal(self, inst, now, engine)
         return inst
 
@@ -278,6 +299,9 @@ class PolicySystemBase:
             inst.remove_decoding(r)
         self.fault_stats["crashes"] += 1
         self.fault_stats["lost"] += len(lost)
+        trc = self.tracer
+        if trc.enabled:
+            trc.instance(now, inst.iid, "crash")
         self.failure.on_instance_fault(self, inst, lost, now, engine)
         if engine is not None:
             self._drain_queue(now, engine)
@@ -293,6 +317,9 @@ class PolicySystemBase:
         deadline = now + notice
         self._evacuating[inst.iid] = deadline
         self.fault_stats["preemptions"] += 1
+        trc = self.tracer
+        if trc.enabled:
+            trc.instance(now, inst.iid, "preempt")
         self.failure.on_notice(self, inst, deadline, now, engine)
         engine.push_call(deadline, self._preempt_deadline, inst, engine)
 
@@ -308,6 +335,9 @@ class PolicySystemBase:
         for r in list(inst.decoding):
             inst.remove_decoding(r)
         self.fault_stats["lost"] += len(lost)
+        trc = self.tracer
+        if trc.enabled:
+            trc.instance(engine.now, inst.iid, "preempt_dead")
         if lost:
             self.failure.on_instance_fault(self, inst, lost, engine.now,
                                            engine)

@@ -39,8 +39,14 @@ import dataclasses
 import itertools
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.obs.events import NULL_TRACER
+
 POOL = -2            # MoonCake's centralized KV pool endpoint
 CTRL = -1            # the coordination plane (scheduler / controller)
+
+# per-(src,dst)-link counter template: which fates a single link can see
+_LINK_KEYS = ("sent", "delivered", "lost", "retries", "timeouts",
+              "breaker_opens")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +101,9 @@ class CircuitBreaker:
 class Transport:
     """The message plane between instances and the coordination plane."""
 
+    # flight-recorder hook (repro.obs.attach_tracer)
+    tracer = NULL_TRACER
+
     def __init__(self, config: Optional[TransportConfig] = None):
         self.config = config or TransportConfig()
         # None = ideal links (the default); the fault injector attaches a
@@ -110,6 +119,15 @@ class Transport:
             "rpc_calls": 0, "rpc_retries": 0, "rpc_failures": 0,
             "snapshots_dropped": 0, "snapshots_delayed": 0,
         }
+        # per-(src,dst) message fates; populated only on the degraded
+        # path (mirrors ``stats``), so clean cells report no links
+        self.link_stats: Dict[Tuple[int, int], Dict[str, int]] = {}
+
+    def _link(self, src: int, dst: int) -> Dict[str, int]:
+        ls = self.link_stats.get((src, dst))
+        if ls is None:
+            ls = self.link_stats[(src, dst)] = dict.fromkeys(_LINK_KEYS, 0)
+        return ls
 
     # ---------------- plane attachment / reachability ------------------- #
     def attach_network(self, network) -> None:
@@ -153,6 +171,10 @@ class Transport:
             return
         mid = next(self._msg_ids)
         self.stats["sent"] += 1
+        self._link(src, dst)["sent"] += 1
+        trc = self.tracer
+        if trc.enabled:
+            trc.transport(now, "send", kind, src, dst)
         self._attempt(engine, mid, kind, src, dst, nbytes, now, now,
                       deliver, on_lost, link, 0)
 
@@ -176,6 +198,9 @@ class Transport:
         if not breaker.allow(t):
             # open circuit: fail fast, no timeout wait
             self.stats["breaker_fastfails"] += 1
+            trc = self.tracer
+            if trc.enabled:
+                trc.transport(t, "fastfail", kind, src, dst)
             self._retry_or_lose(engine, mid, kind, src, dst, nbytes, t0,
                                 t, deliver, on_lost, link, attempt)
             return
@@ -187,8 +212,12 @@ class Transport:
                                  extra_latency=net.delay()) \
                 if link is not None else t + net.delay()
             self.stats["delivered"] += 1
+            self._link(src, dst)["delivered"] += 1
             self._log(mid, kind, src, dst, attempt + 1, "delivered",
                       t0, done)
+            trc = self.tracer
+            if trc.enabled:
+                trc.transport(done, "deliver", kind, src, dst)
             engine.push(done, deliver)
             return
         # lost in flight: the sender only notices at its timeout
@@ -196,8 +225,15 @@ class Transport:
                       cfg.timeout_factor * self._nominal(nbytes, link))
         t_detect = t + timeout
         self.stats["timeouts"] += 1
+        self._link(src, dst)["timeouts"] += 1
+        trc = self.tracer
+        if trc.enabled:
+            trc.transport(t_detect, "timeout", kind, src, dst)
         if breaker.record_fail(t_detect):
             self.stats["breaker_opens"] += 1
+            self._link(src, dst)["breaker_opens"] += 1
+            if trc.enabled:
+                trc.transport(t_detect, "breaker_open", kind, src, dst)
             self._dst_open[dst] = max(self._dst_open.get(dst, 0.0),
                                       breaker.open_until)
         engine.push_call(t_detect, self._retry_or_lose, engine, mid, kind,
@@ -208,12 +244,19 @@ class Transport:
                        dst: int, nbytes: float, t0: float, t: float,
                        deliver, on_lost, link, attempt: int) -> None:
         cfg = self.config
+        trc = self.tracer
         if attempt >= cfg.retries:
             self.stats["lost"] += 1
+            self._link(src, dst)["lost"] += 1
             self._log(mid, kind, src, dst, attempt + 1, "lost", t0, t)
+            if trc.enabled:
+                trc.transport(t, "lost", kind, src, dst)
             on_lost()
             return
         self.stats["retries"] += 1
+        self._link(src, dst)["retries"] += 1
+        if trc.enabled:
+            trc.transport(t, "retry", kind, src, dst)
         backoff = min(cfg.backoff_cap, cfg.backoff_base * (2 ** attempt))
         jitter = (2.0 * self.network.draw("jit", mid, attempt) - 1.0)
         backoff *= 1.0 + cfg.jitter * jitter
@@ -256,8 +299,14 @@ class Transport:
             return False
         if net.partitioned(src) or net.partitioned(dst):
             self.stats["rpc_failures"] += 1
+            trc = self.tracer
+            if trc.enabled:
+                trc.transport(now, "rpc_fail", "rpc", src, dst)
             if breaker.record_fail(now):
                 self.stats["breaker_opens"] += 1
+                self._link(src, dst)["breaker_opens"] += 1
+                if trc.enabled:
+                    trc.transport(now, "breaker_open", "rpc", src, dst)
                 self._dst_open[dst] = max(self._dst_open.get(dst, 0.0),
                                           breaker.open_until)
             return False
@@ -271,8 +320,14 @@ class Transport:
                 return True
         self.stats["rpc_retries"] += self.config.retries
         self.stats["rpc_failures"] += 1
+        trc = self.tracer
+        if trc.enabled:
+            trc.transport(now, "rpc_fail", "rpc", src, dst)
         if breaker.record_fail(now):
             self.stats["breaker_opens"] += 1
+            self._link(src, dst)["breaker_opens"] += 1
+            if trc.enabled:
+                trc.transport(now, "breaker_open", "rpc", src, dst)
             self._dst_open[dst] = max(self._dst_open.get(dst, 0.0),
                                       breaker.open_until)
         return False
@@ -290,16 +345,27 @@ class Transport:
         p = net.loss()
         if p > 0.0 and net.draw("snap", mid) < p:
             self.stats["snapshots_dropped"] += 1
+            trc = self.tracer
+            if trc.enabled:
+                trc.transport(now, "snapshot_drop", "snapshot", CTRL, CTRL)
             return ("drop", 0.0)
         d = net.delay()
         if d > 0.0:
             self.stats["snapshots_delayed"] += 1
+            trc = self.tracer
+            if trc.enabled:
+                trc.transport(now, "snapshot_delay", "snapshot", CTRL, CTRL)
             return ("delay", d)
         return ("ok", 0.0)
 
     # ---------------- accounting ---------------------------------------- #
-    def summary(self) -> Dict[str, int]:
+    def summary(self) -> Dict[str, Any]:
         """JSON-safe counters for result rows (the per-message ``log``
         stays in-process: determinism tests compare it, goldens pin only
-        these totals)."""
-        return dict(self.stats)
+        these totals).  ``links`` breaks the totals down per
+        (src, dst) pair — empty on a clean plane, since only the
+        degraded path touches ``link_stats``."""
+        out: Dict[str, Any] = dict(self.stats)
+        out["links"] = {f"{src}->{dst}": dict(v)
+                        for (src, dst), v in sorted(self.link_stats.items())}
+        return out

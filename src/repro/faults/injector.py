@@ -74,6 +74,9 @@ class FaultInjector:
         if ev.kind in NETWORK_KINDS:
             self._fire_network(ev, engine, live, entry)
             self.log.append(entry)
+            trc = engine.tracer
+            if trc.enabled and "skipped" not in entry:
+                trc.fault(engine.now, ev.kind, entry.get("iid"))
             return
         if ev.kind == "slow":
             victims = [i for i in live
@@ -110,6 +113,9 @@ class FaultInjector:
                                      engine)
                 entry["notice"] = ev.notice
         self.log.append(entry)
+        trc = engine.tracer
+        if trc.enabled and "skipped" not in entry:
+            trc.fault(engine.now, ev.kind, entry.get("iid"))
 
     def _fire_network(self, ev: FaultEvent, engine, live: List[Instance],
                       entry: Dict) -> None:

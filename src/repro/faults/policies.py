@@ -32,6 +32,7 @@ from typing import List, Optional, Union
 
 from repro.core.instance import Instance
 from repro.core.request import Request, RequestState
+from repro.obs.events import NULL_TRACER
 
 
 def _fmt(x: float) -> str:
@@ -76,6 +77,11 @@ class FailurePolicy:
         req.state = RequestState.FAILED
         req.instance_id = None
         system.fault_stats["dropped"] += 1
+        # getattr: fault hooks also run against bare test stubs that
+        # don't inherit PolicySystemBase's tracer attribute
+        trc = getattr(system, "tracer", NULL_TRACER)
+        if trc.enabled:
+            trc.fail(trc.now(), req.rid, "dropped")
 
     def describe(self) -> str:
         return self.name
@@ -126,6 +132,9 @@ class ResubmitFailure(FailurePolicy):
         req.tokens_generated = 0
         req.instance_id = None
         system.queue.append(req)
+        trc = getattr(system, "tracer", NULL_TRACER)
+        if trc.enabled:
+            trc.requeue(trc.now(), req.rid)
         return True
 
     def on_instance_fault(self, system, inst, reqs, now, engine):
@@ -186,6 +195,9 @@ class MigrateFailure(ResubmitFailure):
             r.instance_id = resolved.iid
             resolved.add_decoding(r)
             system.fault_stats["migrated"] += 1
+            trc = getattr(system, "tracer", NULL_TRACER)
+            if trc.enabled:
+                trc.migrate(now, r.rid, inst.iid, resolved.iid)
             if engine is not None:
                 engine.activate(resolved)
         if not inst.pending and not inst.decoding:

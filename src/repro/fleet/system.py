@@ -28,6 +28,7 @@ from repro.core.request import Request
 from repro.core.slo import as_slo_class_set
 from repro.core.transport import Transport
 from repro.fleet.router import make_router
+from repro.obs.events import NULL_TRACER
 from repro.fleet.spec import (DEFAULT_GPU_PRICES, FleetSpec, dollars_per_token,
                               parse_fleet)
 from repro.simulator.cost_model import (GPU_A800, GPU_L20, TPU_V5E_SIM,
@@ -54,11 +55,22 @@ class FleetTransport(Transport):
         for t in self._pool_transports:
             t.attach_network(network)
 
-    def summary(self) -> Dict[str, int]:
-        out = dict(self.stats)
+    def summary(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = dict(self.stats)
         for t in self._pool_transports:
             for k, v in t.stats.items():
                 out[k] = out.get(k, 0) + v
+        # pools mint iids in disjoint bands, but CTRL/POOL endpoints are
+        # shared — merge per-link rows by key-sum
+        merged: Dict[Any, Dict[str, int]] = {}
+        for src_stats in ([self.link_stats]
+                          + [t.link_stats for t in self._pool_transports]):
+            for key, row in src_stats.items():
+                acc = merged.setdefault(key, dict.fromkeys(row, 0))
+                for k, v in row.items():
+                    acc[k] = acc.get(k, 0) + v
+        out["links"] = {f"{src}->{dst}": v
+                        for (src, dst), v in sorted(merged.items())}
         return out
 
 
@@ -66,6 +78,9 @@ class FleetSystem:
     """Several model pools sharing one engine and one GPU budget."""
 
     base_name = "fleet"
+    # flight-recorder hook (repro.obs.attach_tracer wires this plus every
+    # member pool's own tracer slot)
+    tracer = NULL_TRACER
 
     def __init__(self, spec, slo, *, hw: str = "L20", tp: int = 4,
                  pp: int = 1, router="pinned",
@@ -154,6 +169,9 @@ class FleetSystem:
         k = self.router.route(req, self, now)
         self.pool_of_rid[req.rid] = k
         self.routed_counts[k] += 1
+        trc = self.tracer
+        if trc.enabled:
+            trc.control(now, "fleet_route", (req.rid, k))
         if self.on_route is not None:
             self.on_route(k, req, now)
         self.pools[k].submit(req, now, engine)

@@ -22,6 +22,7 @@ from repro.core.mitosis import register_instance, unregister_instance
 from repro.core.padg_system import EcoServeSystem
 from repro.core.request import Request, RequestState
 from repro.core.slo import SLO
+from repro.obs.events import attach_tracer
 from repro.serving.replay import (FakeEngine, RealEngineBackend,
                                   ReplayEngine, WallClock)
 
@@ -141,6 +142,7 @@ class PaDGServer:
                                 econf.max_batch * econf.max_seq_len)
         self.system = RealEcoServeSystem(executors, engines, econf, slo,
                                          model)
+        self.recorder = recorder
         self.finished: List[Request] = []
 
     @property
@@ -150,10 +152,13 @@ class PaDGServer:
     # --------------------------------------------------------------- #
     def serve(self, requests: List[Request], time_scale: float = 1.0,
               clock=None, record_decisions: bool = False,
-              horizon: float = float("inf")) -> ServeStats:
+              horizon: float = float("inf"), tracer=None) -> ServeStats:
         """Serve a request trace.  ``time_scale`` > 1 stretches trace
         time on the default wall clock; pass a ``VirtualClock`` for a
-        deterministic (conformance) replay."""
+        deterministic (conformance) replay.  ``tracer`` attaches a
+        flight recorder to the served run — the same
+        ``repro.obs.Tracer`` the simulator uses, with the recorder's
+        per-op samples riding the same bus."""
         usable = self.econf.max_seq_len - 2
         accepted, rejected = [], []
         for r in requests:
@@ -170,6 +175,10 @@ class PaDGServer:
         if record_decisions:
             engine.decision_log = log
             self.system.decision_log = log
+        if tracer is not None:
+            attach_tracer(tracer, engine=engine, system=self.system)
+            if self.recorder is not None:
+                self.recorder.tracer = tracer
         try:
             finished = engine.run(accepted, horizon=horizon)
         finally:

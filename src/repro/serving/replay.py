@@ -282,6 +282,9 @@ class ReplayEngine(SimulationEngine):
                 self.now = max(self.now, t_arr)
                 req = arrivals[i]
                 i += 1
+                trc = self.tracer
+                if trc.enabled:
+                    trc.arrive(self.now, req)
                 self.system.submit(req, self.now, self)
             else:
                 break

@@ -27,6 +27,7 @@ from repro.core.instance import Instance
 from repro.core.request import Request
 from repro.core.system import ServingSystem  # noqa: F401  (re-export: the
 # formal protocol moved to repro.core.system; engine callers keep working)
+from repro.obs.events import NULL_TRACER, attach_decision_log
 
 
 class Link:
@@ -62,12 +63,25 @@ class _Event:
 
 
 class SimulationEngine:
-    # Optional scheduling-decision trace (sim-to-real conformance): when a
-    # list is attached, ``activate`` appends one
-    # ("slot", t_start, iid, kind, duration, (rids...)) entry per slot it
-    # starts.  Shared with ``PolicySystemBase.decision_log`` so admission
-    # and slot events interleave into one totally ordered sequence.
-    decision_log: Optional[List] = None
+    # Flight-recorder hook (repro.obs): NULL_TRACER keeps the hot path
+    # allocation-free — every emission site is guarded by one attribute
+    # read.  ``attach_tracer`` swaps in a live Tracer.
+    tracer = NULL_TRACER
+    _decision_log: Optional[List] = None
+
+    @property
+    def decision_log(self) -> Optional[List]:
+        """Compat shim for the PR 8 scheduling-decision trace: attaching
+        a list here installs it as a tracer mirror, so ``activate``
+        appends the historic ("slot", t_start, iid, kind, duration,
+        (rids...)) tuples through the event bus.  Shared with
+        ``PolicySystemBase.decision_log`` so admission and slot events
+        interleave into one totally ordered sequence."""
+        return self._decision_log
+
+    @decision_log.setter
+    def decision_log(self, log: Optional[List]) -> None:
+        attach_decision_log(self, log)
 
     def __init__(self, system: ServingSystem):
         self.system = system
@@ -95,10 +109,10 @@ class SimulationEngine:
         kind, dur, reqs = inst.next_slot(self.now)
         if kind == "idle":
             return
-        if self.decision_log is not None:
-            self.decision_log.append(
-                ("slot", self.now, inst.iid, kind, dur,
-                 tuple(r.rid for r in reqs)))
+        trc = self.tracer
+        if trc.enabled:
+            trc.slot(self.now, inst, kind, dur, reqs,
+                     len(getattr(self.system, "queue", ())))
         self._executing[inst.iid] = True
         t_end = self.now + dur
         self.push_call(t_end, self._complete_slot, inst, kind, reqs, t_end)
@@ -113,14 +127,20 @@ class SimulationEngine:
             # their (possibly re-running) state and the dead instance's
             # aggregates
             return
+        trc = self.tracer
         if kind == "prefill" and not inst.decode_here:
             # FuDG prefill instance: mark first token, hand off
             inst.handoff_prefilled(reqs, t_end)
+            if trc.enabled:
+                trc.handoff(t_end, inst.iid, reqs)
             self.system.on_slot_end(inst, "prefill_handoff", reqs,
                                     self.now, self)
         else:
             done = inst.complete_slot(kind, reqs, t_end)
             self.finished.extend(done)
+            if trc.enabled and done:
+                for r in done:
+                    trc.finish(t_end, r.rid)
             self.system.on_slot_end(inst, kind, reqs, self.now, self)
         self.activate(inst)
 
@@ -146,6 +166,9 @@ class SimulationEngine:
                 self.now = t_arr
                 req = arrivals[i]
                 i += 1
+                trc = self.tracer
+                if trc.enabled:
+                    trc.arrive(t_arr, req)
                 self.system.submit(req, self.now, self)
             else:
                 break

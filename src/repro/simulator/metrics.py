@@ -52,7 +52,8 @@ def phase_edges(duration: float, warmup: float, phases: int):
 def run_once(system_factory: Callable[[], object], workload,
              rate: float, slo, duration: float = 240.0,
              warmup: float = None, seed: int = 0,
-             control=None, phases=None, faults=None) -> Dict[str, float]:
+             control=None, phases=None, faults=None,
+             trace=None) -> Dict[str, float]:
     """One simulation at a fixed rate.  ``slo`` is a bare ``SLO`` or an
     ``SLOClassSet``; a heterogeneous set adds ``attainment_by_class``
     (per-class grid) and ``attainment_min`` (worst class) to the row.
@@ -74,7 +75,15 @@ def run_once(system_factory: Callable[[], object], workload,
     prebuilt ``FaultSchedule``; the row then carries the injector's
     ``faults`` summary (applied events + failure-policy stats).  Faulted
     requests that never finish count as misses exactly like any other
-    unfinished request."""
+    unfinished request.
+
+    ``trace`` attaches the flight recorder (``repro.obs``): ``True``
+    captures in memory, a ``Tracer`` instance is attached as-is, and a
+    path string/``PathLike`` additionally writes the events as JSONL at
+    the end of the run.  Tracing is observation-only — it never touches
+    the event timeline — and the captured events are reported under
+    ``out["trace"]`` (count + path), a key the runner excludes from
+    golden rows so the axis stays seed-neutral."""
     system = system_factory()
     warmup = duration * 0.15 if warmup is None else min(warmup,
                                                         duration * 0.5)
@@ -90,6 +99,19 @@ def run_once(system_factory: Callable[[], object], workload,
         rate = scen_rate
     reqs = gen.generate(duration)
     engine = SimulationEngine(system)
+    tracer = None
+    trace_path = None
+    if trace is not None and trace is not False:
+        # lazy for the same reason as control/faults: untraced cells
+        # stay as cheap as before the obs layer existed
+        from repro.obs.events import Tracer, attach_tracer
+        if isinstance(trace, Tracer):
+            tracer = trace
+        else:
+            tracer = Tracer()
+            if trace is not True:          # str / PathLike destination
+                trace_path = trace
+        attach_tracer(tracer, engine=engine, system=system)
     if control is not None:
         if hasattr(system, "pools"):
             # a fleet cell: capacity decisions are budget-constrained
@@ -186,6 +208,14 @@ def run_once(system_factory: Callable[[], object], workload,
     if injector is not None:
         out["faults"] = injector.summary()
     out.update(percentile_latencies(scored))
+    if tracer is not None:
+        # JSON-safe digest only: callers that want the events pass their
+        # own Tracer (trace=<Tracer>) and keep the reference
+        out["trace"] = {"events": len(tracer.events)}
+        if trace_path is not None:
+            from repro.obs.export import write_jsonl
+            write_jsonl(tracer, trace_path)
+            out["trace"]["path"] = str(trace_path)
     return out
 
 

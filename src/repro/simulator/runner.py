@@ -204,6 +204,8 @@ def _run_cell(spec: Dict) -> Dict:
         run_kw["phases"] = spec["phases"]
     if spec.get("faults"):           # None = fault-free cell
         run_kw["faults"] = spec["faults"]
+    if spec.get("trace"):            # None = untraced cell (legacy)
+        run_kw["trace"] = spec["trace"]
     metrics = run_once(factory, scenario, spec["rate"], slo,
                        duration=spec["duration"], warmup=spec["warmup"],
                        seed=spec["seed"], **run_kw)
@@ -295,6 +297,14 @@ class ExperimentRunner:
     # split the scored window into this many equal attainment phases
     # (rows gain attainment_by_phase / attainment_phase_min)
     phases: Optional[int] = None
+    # flight-recorder capture (repro.obs): None = untraced (legacy); a
+    # directory path makes every cell write its event stream to
+    # ``<dir>/cell<idx>.trace.jsonl``.  Seed-neutral BY CONSTRUCTION, not
+    # just by seed bookkeeping: tracing is observation-only, so a traced
+    # cell's metrics are bit-identical to the untraced cell's (the
+    # property test pins this), and "trace" never enters SUMMARY_KEYS so
+    # golden rows can't see it.
+    trace: Optional[str] = None
     duration: float = 60.0
     warmup: Optional[float] = None
     base_seed: int = 0
@@ -357,6 +367,11 @@ class ExperimentRunner:
             raise ValueError("calibration cells are fixed-rate only for "
                              "now: a frontier over mixed cost models "
                              "would hide which model moved it")
+        if self.trace is not None and self.mode == "goodput":
+            raise ValueError("trace capture is fixed-rate only: the "
+                             "goodput search runs ~10 probe simulations "
+                             "per cell and each would overwrite the "
+                             "cell's trace file")
 
     # ---- grid axes ---------------------------------------------------- #
     def _instance_counts(self) -> Tuple[int, ...]:
@@ -529,6 +544,11 @@ class ExperimentRunner:
                                         # shares arrivals by design
                                         cell["fleet"] = fl
                                     out.append(cell)
+        if self.trace is not None:
+            import os
+            for i, cell in enumerate(out):
+                cell["trace"] = os.path.join(
+                    self.trace, f"cell{i:04d}.trace.jsonl")
         return out
 
     def run(self) -> Dict:
@@ -587,6 +607,8 @@ class ExperimentRunner:
             meta.pop("fleet")
         else:
             meta["fleet"] = list(self._fleet_axis())
+        if self.trace is None:          # and for the trace capture axis
+            meta.pop("trace")
         if self.phases is None:
             meta.pop("phases")
         if not isinstance(self.n_instances, int):

@@ -1,0 +1,353 @@
+"""Unit layer for the flight recorder (``repro.obs``).
+
+The contracts under test:
+
+* ``NULL_TRACER`` is inert and allocation-free; every emission site
+  guards on ``tracer.enabled`` so the off path costs one attribute read;
+* the ``decision_log`` compat shim: attaching a list to
+  ``engine.decision_log`` / ``system.decision_log`` keeps producing the
+  exact legacy tuples (mirror-only tracer), detaching restores the
+  null tracer;
+* ``attach_tracer`` threads one tracer through engine, system,
+  transport, macro scheduler, and macros;
+* the JSONL codec round-trips every event; the Chrome-trace export
+  renders one span per slot plus counters;
+* per-(src,dst) link counters surface under ``Transport.summary()
+  ["links"]`` and key-sum to the aggregate stats;
+* TTFT attribution components sum exactly to each request's measured
+  TTFT on a live engine run.
+"""
+import io
+import json
+from contextlib import redirect_stdout
+
+import pytest
+
+from repro.baselines import make_system
+from repro.configs import get_config
+from repro.core.slo import DATASET_SLOS
+from repro.core.transport import Transport, TransportConfig
+from repro.faults.network import NetworkModel
+from repro.obs.events import (NULL_TRACER, NullTracer, Tracer,
+                              attach_tracer, slot_rids)
+from repro.obs.export import (SCHEMA, chrome_trace, read_jsonl, to_dicts,
+                              write_jsonl)
+from repro.obs.metrics import (attribution, instance_series, interference,
+                               summarize, tpot_jitter)
+from repro.simulator.cost_model import GPU_L20, InstanceCostModel
+from repro.simulator.engine import Link, SimulationEngine
+from repro.simulator.runner import cell_seed
+from repro.simulator.scenarios import make_scenario
+
+
+def _cost():
+    return InstanceCostModel(cfg=get_config("llama-30b"), hw=GPU_L20,
+                             tp=4, pp=1)
+
+
+def _traced_run(strategy="ecoserve", scenario="bursty", rate=6.0,
+                duration=12.0, n_instances=4):
+    seed = cell_seed(42, strategy, scenario, rate)
+    system = make_system(strategy, _cost(), n_instances,
+                         DATASET_SLOS["sharegpt"])
+    reqs = make_scenario(scenario, "sharegpt", rate,
+                         seed=seed).generate(duration)
+    engine = SimulationEngine(system)
+    trc = Tracer()
+    attach_tracer(trc, engine=engine, system=system)
+    engine.run(reqs, horizon=duration * 2.5)
+    return trc, reqs, engine
+
+
+# --------------------------------------------------------------------- #
+# null tracer / guard contract
+# --------------------------------------------------------------------- #
+def test_null_tracer_is_inert_and_shared():
+    assert NULL_TRACER.enabled is False
+    assert NULL_TRACER.events == ()
+    assert NULL_TRACER.now() == -1.0
+    # unguarded cold-path emissions must not crash or allocate events
+    NULL_TRACER.slot(0.0, None, "prefill", 1.0, [], 0)
+    NULL_TRACER.control(0.0, "decision", None)
+    assert NULL_TRACER.events == ()
+    assert isinstance(NULL_TRACER, NullTracer)
+
+
+def test_default_wiring_is_null_everywhere():
+    system = make_system("ecoserve", _cost(), 2, DATASET_SLOS["sharegpt"])
+    engine = SimulationEngine(system)
+    assert engine.tracer is NULL_TRACER
+    assert system.tracer is NULL_TRACER
+    assert system.transport.tracer is NULL_TRACER
+
+
+def test_tracer_clock_fallback():
+    trc = Tracer()
+    assert trc.now() == -1.0
+    trc.clock = lambda: 7.5
+    assert trc.now() == 7.5
+
+
+# --------------------------------------------------------------------- #
+# decision_log compat shim
+# --------------------------------------------------------------------- #
+def test_decision_log_shim_produces_legacy_tuples():
+    system = make_system("ecoserve", _cost(), 2, DATASET_SLOS["sharegpt"])
+    engine = SimulationEngine(system)
+    log = []
+    engine.decision_log = log
+    system.decision_log = log
+    assert engine.decision_log is log
+    # the shim-minted tracer is mirror-only: no events accumulate
+    assert engine.tracer.enabled and engine.tracer.events == []
+    seed = cell_seed(42, "ecoserve", "poisson", 4.0)
+    reqs = make_scenario("poisson", "sharegpt", 4.0,
+                         seed=seed).generate(6.0)
+    engine.run(reqs, horizon=15.0)
+    assert log, "decision log stayed empty"
+    kinds = {e[0] for e in log}
+    assert kinds <= {"slot", "admit", "queue", "drain"}
+    assert all(isinstance(e, tuple) for e in log)
+    slot = next(e for e in log if e[0] == "slot")
+    assert len(slot) == 6 and isinstance(slot[5], tuple)  # legacy shape
+    assert engine.tracer.events == []   # still mirror-only
+    # detaching restores the null tracer
+    engine.decision_log = None
+    system.decision_log = None
+    assert engine.tracer is NULL_TRACER
+    assert system.tracer is NULL_TRACER
+
+
+def test_decision_log_mirrors_through_live_tracer():
+    """A run with BOTH a tracer and a decision_log: the log still gets
+    the legacy tuples and the tracer records the full stream."""
+    system = make_system("ecoserve", _cost(), 2, DATASET_SLOS["sharegpt"])
+    engine = SimulationEngine(system)
+    log = []
+    engine.decision_log = log
+    system.decision_log = log
+    trc = Tracer()
+    attach_tracer(trc, engine=engine, system=system)
+    seed = cell_seed(42, "ecoserve", "poisson", 4.0)
+    reqs = make_scenario("poisson", "sharegpt", 4.0,
+                         seed=seed).generate(6.0)
+    engine.run(reqs, horizon=15.0)
+    assert log and trc.events
+    n_slots = sum(1 for e in log if e[0] == "slot")
+    assert n_slots == sum(1 for e in trc.events if e[0] == "slot")
+
+
+# --------------------------------------------------------------------- #
+# attach_tracer wiring
+# --------------------------------------------------------------------- #
+def test_attach_tracer_threads_the_whole_stack():
+    system = make_system("ecoserve", _cost(), 2, DATASET_SLOS["sharegpt"])
+    engine = SimulationEngine(system)
+    trc = Tracer()
+    attach_tracer(trc, engine=engine, system=system)
+    assert engine.tracer is trc and system.tracer is trc
+    assert system.transport.tracer is trc
+    sched = getattr(system, "sched", None)
+    if sched is not None:
+        assert sched.tracer is trc
+        assert all(m.tracer is trc for m in sched.macros)
+    # the clock rides the engine
+    assert trc.now() == engine.now
+
+
+# --------------------------------------------------------------------- #
+# event capture + analyses on a live run
+# --------------------------------------------------------------------- #
+def test_traced_run_captures_lifecycle_and_slots():
+    trc, reqs, engine = _traced_run()
+    kinds = {e[0] for e in trc.events}
+    assert {"arrive", "admit", "slot", "finish"} <= kinds
+    n_arrive = sum(1 for e in trc.events if e[0] == "arrive")
+    assert n_arrive == len(reqs)
+    n_finish = sum(1 for e in trc.events if e[0] == "finish")
+    assert n_finish == len(engine.finished)
+
+
+def test_attribution_components_sum_exactly_to_measured_ttft():
+    trc, reqs, _ = _traced_run()
+    attr = attribution(trc.events)
+    rows = {r["rid"]: r for r in attr["rows"]}
+    measured = [r for r in reqs if r.ttft is not None]
+    assert measured and len(rows) == len(measured)
+    for r in measured:
+        row = rows[r.rid]
+        # the decomposition telescopes: bit-exact per-row sum
+        assert (row["queue_wait"] + row["prefill_wait"]
+                + row["prefill_service"] + row["transfer"]) == row["ttft"]
+        # and the events-derived TTFT matches the engine's measurement
+        # (same floats up to association order of the telescoping sum)
+        assert row["ttft"] == pytest.approx(r.ttft, abs=1e-9)
+        assert row["queue_wait"] >= 0 and row["prefill_wait"] >= -1e-12
+
+
+def test_instance_series_and_interference_shapes():
+    trc, _, _ = _traced_run()
+    series = instance_series(trc.events)
+    assert series, "no per-instance series"
+    for iid, s in series.items():
+        n = len(s["t"])
+        assert n > 0
+        for k in ("kind", "dur", "batch", "kv_occupancy", "queue_depth",
+                  "decode_batch_util", "prefill_backlog_tokens"):
+            assert len(s[k]) == n
+        assert all(0.0 <= v <= 1.0 + 1e-9 for v in s["kv_occupancy"])
+        assert all(0.0 <= v <= 1.0 + 1e-9 for v in s["decode_batch_util"])
+    inter = interference(trc.events)
+    assert inter["n"] > 0
+    assert inter["score"] >= 0.0
+    assert inter["max"] >= inter["p99"] >= inter["p50"] >= 1.0 - 1e-9
+    jit = tpot_jitter(trc.events)
+    assert jit["n"] > 0 and jit["tpot_mean_p50"] > 0
+
+
+def test_summarize_digest_is_json_safe_and_exact():
+    trc, _, _ = _traced_run()
+    digest = summarize(trc.events)
+    json.dumps(digest)                      # JSON-safe end to end
+    assert digest["attribution"]["exact"] is True
+    assert digest["events"] == len(trc.events)
+    assert digest["instances"] >= 1
+
+
+# --------------------------------------------------------------------- #
+# JSONL codec + Chrome-trace export
+# --------------------------------------------------------------------- #
+def test_jsonl_round_trip_is_lossless(tmp_path):
+    trc, _, _ = _traced_run(duration=8.0)
+    path = tmp_path / "run.trace.jsonl"
+    trc.meta["name"] = "unit"
+    n = write_jsonl(trc, path)
+    assert n == len(trc.events)
+    events, meta = read_jsonl(path)
+    assert meta == {"name": "unit"}
+    # live events may hold request batches; the named-field view is the
+    # canonical equality domain
+    assert to_dicts(events) == to_dicts(trc.events)
+    # analyses agree between live and re-read events
+    assert summarize(events) == summarize(trc.events)
+
+
+def test_schema_covers_every_emitted_event_type():
+    trc, _, _ = _traced_run(duration=8.0)
+    assert {e[0] for e in trc.events} <= set(SCHEMA)
+    for ev in trc.events:
+        assert len(ev) == 2 + len(SCHEMA[ev[0]]), ev
+
+
+def test_chrome_trace_renders_slots_and_counters():
+    trc, _, _ = _traced_run(duration=8.0)
+    doc = chrome_trace(trc.events, meta={"name": "unit"})
+    evs = doc["traceEvents"]
+    json.dumps(doc)
+    n_slots = sum(1 for e in trc.events if e[0] == "slot")
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert len(spans) == n_slots
+    assert {e["ph"] for e in evs} <= {"X", "C", "i", "M"}
+    counters = {e["name"].split(" (")[0] for e in evs if e["ph"] == "C"}
+    assert {"kv_occupancy", "queue_depth", "decode_batch_util",
+            "prefill_backlog_tokens"} <= counters
+    assert all(e["ts"] >= 0 and e.get("dur", 0) >= 0 for e in spans)
+
+
+def test_slot_rids_normalizes_both_representations():
+    class _R:
+        def __init__(self, rid):
+            self.rid = rid
+    assert slot_rids([_R(3), _R(1)]) == (3, 1)
+    assert slot_rids((3, 1)) == (3, 1)
+    assert slot_rids([]) == ()
+
+
+# --------------------------------------------------------------------- #
+# CLI
+# --------------------------------------------------------------------- #
+def test_cli_summarize_attribution_export(tmp_path):
+    from repro.obs.__main__ import main
+    trc, _, _ = _traced_run(duration=8.0)
+    path = tmp_path / "run.trace.jsonl"
+    write_jsonl(trc, path)
+
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        assert main(["summarize", str(path)]) == 0
+    digest = json.loads(buf.getvalue())
+    assert digest["attribution"]["exact"] is True
+
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        assert main(["attribution", str(path), "--limit", "5"]) == 0
+    assert "exact=True" in buf.getvalue()
+
+    out = tmp_path / "run.perfetto.json"
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        assert main(["export", str(path), "--perfetto",
+                     "-o", str(out)]) == 0
+    doc = json.loads(out.read_text())
+    assert doc["traceEvents"]
+
+
+# --------------------------------------------------------------------- #
+# transport link counters
+# --------------------------------------------------------------------- #
+def _drain(engine):
+    engine.drain()
+
+
+def test_link_counters_key_sum_to_aggregate_stats():
+    from tests.test_transport import _Engine, _lossy
+    tr = Transport(TransportConfig(retries=2))
+    tr.attach_network(_lossy(seed=1234, p=0.5))
+    eng = _Engine()
+    link = Link("nic", bandwidth=1e8, latency=1e-3)
+    for i in range(40):
+        tr.transfer(eng, i % 3, (i + 1) % 3, 1e5 * (1 + i % 7),
+                    0.05 * i, deliver=lambda: None,
+                    on_lost=lambda: None, link=link)
+    eng.drain()
+    s = tr.summary()
+    links = s["links"]
+    assert links, "degraded traffic must surface per-link rows"
+    assert set(links) <= {"0->1", "1->2", "2->0"}
+    for key in ("sent", "delivered", "lost", "retries", "timeouts"):
+        assert sum(row[key] for row in links.values()) == s[key], key
+    assert sum(r["sent"] for r in links.values()) == 40
+
+
+def test_link_counters_flow_through_run_once_fault_summary():
+    """End to end: a degraded FuDG cell's ``faults.transport.links``
+    carries per-link rows (satellite contract)."""
+    from repro.simulator.metrics import run_once
+
+    def factory():
+        return make_system("distserve", _cost(), 2,
+                           DATASET_SLOS["sharegpt"])
+
+    out = run_once(factory, make_scenario("poisson", "sharegpt", 3.0,
+                                          seed=11),
+                   3.0, DATASET_SLOS["sharegpt"], duration=10.0,
+                   warmup=2.0, seed=11, faults="netdelay:40")
+    links = out["faults"]["transport"]["links"]
+    assert links and all("->" in k for k in links)
+    assert sum(r["sent"] for r in links.values()) \
+        == out["faults"]["transport"]["sent"] > 0
+
+
+def test_transport_events_emitted_on_degraded_path():
+    from tests.test_transport import _Engine, _lossy
+    tr = Transport(TransportConfig(retries=1))
+    tr.attach_network(_lossy(seed=7, p=1.0))
+    trc = Tracer()
+    tr.tracer = trc
+    eng = _Engine()
+    tr.transfer(eng, 0, 1, 1e5, 0.0, deliver=lambda: None,
+                on_lost=lambda: None, link=Link("nic", 1e9, 1e-3))
+    eng.drain()
+    whats = [e[2] for e in trc.events if e[0] == "transport"]
+    assert "send" in whats and "lost" in whats
+    assert "retry" in whats

@@ -1,0 +1,67 @@
+"""Golden pin for the TTFT attribution contract
+(``tests/golden/trace_attribution.json``).
+
+The traced regression-grid ecoserve/bursty cell must reproduce the
+pinned attribution payload bit-exactly — per-request components that sum
+exactly to the measured TTFT, event counts, interference score — at
+every runner worker count (1 = in-process, 2/3 = spawned pools), via the
+same ``golden_payload`` builder ``benchmarks/bench_trace.py
+--write-golden`` used to pin it.
+"""
+import json
+
+import pytest
+
+from benchmarks.bench_trace import GOLDEN_PATH, golden_payload, smoke_spec
+from repro.obs.export import read_jsonl
+from repro.simulator.runner import ExperimentRunner, regression_runner
+
+
+def _golden():
+    assert GOLDEN_PATH.exists(), (
+        "missing golden; run PYTHONPATH=src python -m "
+        "benchmarks.bench_trace --write-golden")
+    return json.loads(GOLDEN_PATH.read_text())
+
+
+def test_golden_pins_the_exactness_invariant():
+    golden = _golden()
+    assert golden["attribution"]["exact"] is True
+    assert golden["attribution"]["n"] > 0
+    assert golden["attribution"]["unattributed"] == 0
+    tot = golden["attribution"]["totals"]
+    # the per-row invariant survives the golden's 9-dp rounding at the
+    # aggregate level too (rounded totals agree within the last digit)
+    assert tot["ttft"] == pytest.approx(
+        tot["queue_wait"] + tot["prefill_wait"] + tot["prefill_service"]
+        + tot["transfer"], abs=1e-6)
+    assert golden["cell"]["strategy"] == "ecoserve"
+    assert golden["cell"]["scenario"] == "bursty"
+
+
+@pytest.mark.parametrize("n_workers", [1, 2, 3])
+def test_traced_cell_matches_golden_at_every_worker_count(n_workers,
+                                                          tmp_path):
+    base = regression_runner(n_workers=n_workers)
+    tdir = tmp_path / "traces"
+    # two cells so the multi-worker modes actually exercise the pool;
+    # every other grid parameter (and hence the CRC cell seed) is the
+    # regression grid's own
+    runner = ExperimentRunner(
+        strategies=("ecoserve",), scenarios=("poisson", "bursty"),
+        rates=base.rates, model=base.model, hw=base.hw, tp=base.tp,
+        pp=base.pp, n_instances=base.n_instances, workload=base.workload,
+        duration=base.duration, warmup=base.warmup,
+        base_seed=base.base_seed, n_workers=n_workers, trace=str(tdir))
+    results = runner.run()
+    assert not results.get("errors"), results.get("errors")
+
+    cell = next(c for c in results["cells"] if c["scenario"] == "bursty")
+    assert cell["seed"] == smoke_spec()["seed"]
+    events, _meta = read_jsonl(cell["trace"])
+    payload = golden_payload(events, cell)
+    golden = _golden()
+    assert json.dumps(payload, sort_keys=True) \
+        == json.dumps(golden, sort_keys=True), (
+        f"trace attribution drifted from the golden at "
+        f"n_workers={n_workers}")

@@ -100,7 +100,9 @@ def test_clean_plane_is_free_for_rpc_snapshot_and_reachability():
     insts = [object(), object()]
     assert tr.filter_reachable(insts, 1.0) is insts   # same list object
     assert tr.instance_reachable(99, 0.0)
-    assert all(v == 0 for v in tr.summary().values())
+    s = tr.summary()
+    assert s.pop("links") == {}   # no degraded traffic -> no link rows
+    assert all(v == 0 for v in s.values())
 
 
 # --------------------------------------------------------------------- #
